@@ -1,0 +1,75 @@
+"""Generate the EXPERIMENTS.md roofline tables from results/dryrun/*.json.
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline_report [results/dryrun]
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+ORDER_SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(path: str):
+    recs = []
+    for f in sorted(os.listdir(path)):
+        if f.endswith(".json"):
+            with open(os.path.join(path, f)) as fh:
+                recs.append(json.load(fh))
+    return recs
+
+
+def fmt_t(x):
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.1f}ms"
+    return f"{x * 1e6:.0f}us"
+
+
+def table(recs, mesh: str):
+    rows = [r for r in recs if r["mesh"] == mesh]
+    rows.sort(key=lambda r: (r["arch"], ORDER_SHAPES.index(r["shape"])))
+    print(f"\n### Mesh {mesh} ({rows[0]['chips']} chips)\n")
+    print("| arch | shape | t_compute | t_memory | t_coll | bottleneck | "
+          "useful-FLOPs | peak GiB | note |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        note = "longctx-variant" if r.get("longctx_variant") else ""
+        print(f"| {r['arch']} | {r['shape']} | {fmt_t(r['t_compute'])} | "
+              f"{fmt_t(r['t_memory'])} | {fmt_t(r['t_collective'])} | "
+              f"**{r['bottleneck']}** | {r['useful_flops_ratio']:.3f} | "
+              f"{r['peak_memory_per_chip'] / 2**30:.1f} | {note} |")
+
+
+def interesting(recs):
+    single = [r for r in recs if r["mesh"] == "16x16"]
+    worst_useful = min(single, key=lambda r: r["useful_flops_ratio"] or 1)
+    most_coll = max(single, key=lambda r: (r["t_collective"] /
+                                           max(r["t_compute"],
+                                               r["t_memory"], 1e-12)))
+    train = [r for r in single if r["shape"] == "train_4k"]
+    worst_train = min(train, key=lambda r: r["useful_flops_ratio"] or 1)
+    print("\n### Hillclimb candidates\n")
+    print(f"- worst useful-FLOPs ratio: {worst_useful['arch']} x "
+          f"{worst_useful['shape']} ({worst_useful['useful_flops_ratio']:.3f})")
+    print(f"- most collective-bound: {most_coll['arch']} x "
+          f"{most_coll['shape']} (t_coll {fmt_t(most_coll['t_collective'])})")
+    print(f"- worst train (technique-representative): {worst_train['arch']} "
+          f"x train_4k ({worst_train['useful_flops_ratio']:.3f})")
+
+
+def main():
+    path = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun"
+    recs = load(path)
+    print(f"{len(recs)} dry-run records from {path}")
+    for mesh in ("16x16", "2x16x16"):
+        if any(r["mesh"] == mesh for r in recs):
+            table(recs, mesh)
+    interesting(recs)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Lower + compile one (arch x shape) combination on the production mesh
+and print its roofline terms — the programmatic dry-run API.
+
+Run:  python examples/multipod_dryrun.py [arch] [shape] [single|multi]
+(note: sets XLA_FLAGS itself; run as a fresh process, not under pytest)
+"""
+
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs.base import INPUT_SHAPES          # noqa: E402
+from repro.launch.dryrun import lower_one            # noqa: E402
+
+
+def main():
+    arch = sys.argv[1] if len(sys.argv) > 1 else "gemma2-2b"
+    shape = INPUT_SHAPES[sys.argv[2] if len(sys.argv) > 2 else "decode_32k"]
+    multi = (len(sys.argv) > 3 and sys.argv[3] == "multi")
+    rec = lower_one(arch, shape, multi_pod=multi)
+    print("\nroofline terms (seconds/step):")
+    for k in ("t_compute", "t_memory", "t_collective"):
+        print(f"  {k:13s} {rec[k]:.4f}")
+    print(f"  bottleneck    {rec['bottleneck']}")
+    print(f"  useful-FLOPs  {rec['useful_flops_ratio']:.2%}")
+
+
+if __name__ == "__main__":
+    main()

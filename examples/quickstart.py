@@ -1,0 +1,69 @@
+"""Quickstart: FedHeN vs NoSide vs Decouple on a tiny federated LM.
+
+Reproduces the paper's qualitative result in ~2 minutes on CPU: with the
+side objective (FedHeN), the *simple* server model reaches a target
+accuracy in fewer communication rounds than either baseline, because it
+trains on complex devices' data too (Eq. 2).
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax.numpy as jnp
+
+from repro.configs.base import FedConfig, LayerSpec, ModelConfig
+from repro.core.adapters import LMAdapter
+from repro.core.federated import FederatedTrainer, rounds_to_target
+from repro.data.federated import iid_split
+from repro.data.synthetic import synthetic_lm
+
+CFG = ModelConfig(n_layers=4, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+                  vocab_size=256, pattern=(LayerSpec("attn"),), exit_layer=2,
+                  compute_dtype="float32")
+ROUNDS = 36
+TARGET = 0.15   # held-out token accuracy (chain optimum ~0.75)
+
+
+def run(algorithm: str):
+    fed = FedConfig(n_devices=20, n_simple=10, participation=0.2,
+                    rounds=ROUNDS, local_epochs=1, lr=0.1, batch_size=8,
+                    algorithm=algorithm, seed=0)
+    data = synthetic_lm(400, 32, CFG.vocab_size, seed=1)
+    shards = [
+        {"tokens": jnp.asarray(s["tokens"])}
+        for s in iid_split(data, fed.n_devices, seed=2)]
+    test = {"tokens": jnp.asarray(
+        synthetic_lm(64, 32, CFG.vocab_size, seed=99)["tokens"])}
+    trainer = FederatedTrainer(LMAdapter(CFG), fed, shards)
+    history = trainer.run(ROUNDS, eval_every=2, test_batch=test)
+    r = rounds_to_target(history, "acc_simple", TARGET)
+    final = [h for h in history if "acc_simple" in h][-1]
+    return {"algorithm": algorithm, "rounds_to_target": r,
+            "final_acc_simple": final["acc_simple"],
+            "final_acc_complex": final["acc_complex"],
+            "mbytes": trainer.total_bytes / 1e6}
+
+
+def main():
+    print(f"target: simple-model accuracy >= {TARGET} "
+          f"(rounds to target, lower is better)\n")
+    results = [run(a) for a in ("fedhen", "noside", "decouple")]
+    hdr = f"{'algorithm':10s} {'rounds->tgt':>11s} {'simple':>8s} " \
+          f"{'complex':>8s} {'comm MB':>9s}"
+    print(hdr)
+    print("-" * len(hdr))
+    for r in results:
+        rt = r["rounds_to_target"]
+        print(f"{r['algorithm']:10s} {rt if rt > 0 else '>'+str(ROUNDS):>11} "
+              f"{r['final_acc_simple']:8.3f} {r['final_acc_complex']:8.3f} "
+              f"{r['mbytes']:9.1f}")
+    best_baseline = min(
+        (r["rounds_to_target"] for r in results[1:]
+         if r["rounds_to_target"] > 0), default=-1)
+    fh = results[0]["rounds_to_target"]
+    if fh > 0 and best_baseline > 0:
+        print(f"\nFedHeN communication gain vs best baseline: "
+              f"{best_baseline / fh:.2f}x  (paper reports 1.1-3.3x)")
+
+
+if __name__ == "__main__":
+    main()

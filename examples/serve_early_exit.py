@@ -1,0 +1,15 @@
+"""Serve a small model with batched requests + FedHeN early-exit decoding.
+
+The side objective trains the exit head jointly with the full model, so
+one checkpoint serves two quality/latency operating points; the adaptive
+mode exits early whenever the exit head is confident (Kaya et al. 2019).
+
+Run:  PYTHONPATH=src python examples/serve_early_exit.py
+"""
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main(["--arch", "gemma2-2b", "--reduced", "--batch", "8",
+          "--prompt-len", "32", "--gen", "24",
+          "--adaptive-threshold", "0.5"])

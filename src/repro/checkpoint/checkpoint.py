@@ -1,0 +1,99 @@
+"""Pytree checkpointing (npz-based, no external deps).
+
+Round-resumable federated state: ``save_server`` / ``restore_server`` wrap
+the complex tree (+ optional decouple simple host) with the round counter,
+so ``launch/train.py`` can resume mid-run.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Tree = Any
+_SEP = "/"
+
+
+def _flatten_with_paths(tree: Tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(_path_str(p) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return f"[{p.idx}]"
+    return str(p)
+
+
+def save_tree(path: str, tree: Tree, metadata: Optional[Dict] = None) -> None:
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    flat = _flatten_with_paths(tree)
+    # bf16 isn't npz-native: stash as uint16 view + dtype tag
+    arrays, dtypes = {}, {}
+    for k, v in flat.items():
+        if v.dtype == jnp.bfloat16:
+            arrays[k] = v.view(np.uint16)
+            dtypes[k] = "bfloat16"
+        else:
+            arrays[k] = v
+            dtypes[k] = str(v.dtype)
+    arrays["__dtypes__"] = np.frombuffer(
+        json.dumps(dtypes).encode(), dtype=np.uint8)
+    if metadata is not None:
+        arrays["__meta__"] = np.frombuffer(
+            json.dumps(metadata).encode(), dtype=np.uint8)
+    np.savez(path, **arrays)
+
+
+def restore_tree(path: str, like: Tree) -> Tuple[Tree, Dict]:
+    """Restore into the structure of ``like`` (shape/dtype validated)."""
+    with np.load(path) as data:
+        dtypes = json.loads(bytes(data["__dtypes__"]).decode())
+        meta = (json.loads(bytes(data["__meta__"]).decode())
+                if "__meta__" in data else {})
+        flat_like = _flatten_with_paths(like)
+        restored = {}
+        for k, ref in flat_like.items():
+            if k not in data:
+                raise KeyError(f"checkpoint missing leaf {k}")
+            v = data[k]
+            if dtypes.get(k) == "bfloat16":
+                v = v.view(jnp.bfloat16)
+            if tuple(v.shape) != tuple(ref.shape):
+                raise ValueError(
+                    f"shape mismatch at {k}: {v.shape} vs {ref.shape}")
+            restored[k] = jnp.asarray(v)
+    leaves_paths = jax.tree_util.tree_flatten_with_path(like)
+    keys = [_SEP.join(_path_str(p) for p in path)
+            for path, _ in leaves_paths[0]]
+    return jax.tree_util.tree_unflatten(
+        leaves_paths[1], [restored[k] for k in keys]), meta
+
+
+def save_server(path: str, server, extra_meta: Optional[Dict] = None) -> None:
+    tree = {"complex": server.complex}
+    if server.simple_host is not None:
+        tree["simple_host"] = server.simple_host
+    meta = {"round": server.round, **(extra_meta or {})}
+    save_tree(path, tree, meta)
+
+
+def restore_server(path: str, server):
+    from repro.core.federated import ServerState
+    like = {"complex": server.complex}
+    if server.simple_host is not None:
+        like["simple_host"] = server.simple_host
+    tree, meta = restore_tree(path, like)
+    return ServerState(complex=tree["complex"],
+                       simple_host=tree.get("simple_host"),
+                       round=int(meta.get("round", 0)))

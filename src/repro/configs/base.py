@@ -1,0 +1,314 @@
+"""Configuration dataclasses for the FedHeN framework.
+
+Every model in the zoo is described by a :class:`ModelConfig`.  The layer
+stack is expressed as a repeating *pattern period* (e.g. gemma-2's
+``[local_attn, global_attn]`` alternation or recurrentgemma's
+``[rglru, rglru, local_attn]``), which lets the runtime compile the stack as
+``lax.scan`` over full periods with the remainder layers unrolled — faithful
+interleaving with compact HLO.
+
+FedHeN (the paper's technique) is configured via ``exit_layer``: the simple
+architecture is the depth-prefix ``blocks[:exit_layer]`` plus an early-exit
+head (own final norm, shared unembedding).  ``exit_layer`` must sit on a
+period boundary so the prefix is expressible as a scan over whole periods.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Layer kinds
+# ---------------------------------------------------------------------------
+
+ATTN_GLOBAL = "attn"          # full causal attention
+ATTN_LOCAL = "local_attn"     # sliding-window causal attention
+RGLRU = "rglru"               # Griffin/RecurrentGemma real-gated LRU block
+MLSTM = "mlstm"               # xLSTM matrix-memory block (chunked parallel)
+SLSTM = "slstm"               # xLSTM scalar-memory block (sequential scan)
+
+MIXER_KINDS = (ATTN_GLOBAL, ATTN_LOCAL, RGLRU, MLSTM, SLSTM)
+
+MLP_DENSE = "dense"
+MLP_MOE = "moe"
+MLP_NONE = "none"             # block has no separate MLP (xLSTM style)
+
+
+@dataclass(frozen=True)
+class LayerSpec:
+    """One position in the repeating layer pattern."""
+
+    mixer: str = ATTN_GLOBAL
+    mlp: str = MLP_DENSE
+
+    def __post_init__(self):
+        if self.mixer not in MIXER_KINDS:
+            raise ValueError(f"unknown mixer kind {self.mixer!r}")
+        if self.mlp not in (MLP_DENSE, MLP_MOE, MLP_NONE):
+            raise ValueError(f"unknown mlp kind {self.mlp!r}")
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int            # routed experts
+    top_k: int
+    n_shared: int = 0         # always-on shared experts
+    d_expert: int = 0         # per-expert FFN hidden dim
+    capacity_factor: float = 1.25
+    router_z_loss: float = 1e-3
+    load_balance_loss: float = 1e-2
+    # pad the expert axis to this size (0 = off): dead experts never get
+    # routed tokens, but make E divisible by the model axis so the combine
+    # stays local + one small all-reduce (EXPERIMENTS.md §Perf H4)
+    pad_to: int = 0
+
+
+@dataclass(frozen=True)
+class StubFrontend:
+    """Modality frontend stub (the sanctioned carve-out).
+
+    The dry-run's ``input_specs`` provides precomputed embeddings of shape
+    ``(batch, n_tokens, d_in)``; the backbone owns only the projector.
+    """
+
+    kind: str                 # "vision" | "audio_conditioning"
+    n_tokens: int             # tokens the frontend contributes to the sequence
+    d_in: int                 # embedding dim produced by the (stubbed) encoder
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    # -- identity ----------------------------------------------------------
+    name: str = "model"
+    arch_type: str = "dense"  # dense | moe | ssm | hybrid | vlm | audio
+    source: str = ""          # citation for the config numbers
+
+    # -- dimensions --------------------------------------------------------
+    n_layers: int = 2
+    d_model: int = 256
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    head_dim: int = 0         # 0 -> d_model // n_heads
+    d_ff: int = 1024
+    vocab_size: int = 1024
+
+    # -- layer pattern -----------------------------------------------------
+    pattern: Tuple[LayerSpec, ...] = (LayerSpec(),)
+    window: int = 4096        # sliding window for local attention layers
+    rope_theta: float = 10000.0
+    attn_logit_softcap: float = 0.0   # gemma-2 style; 0 disables
+    final_logit_softcap: float = 0.0
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = True
+    use_qk_norm: bool = False
+    d_rnn: int = 0            # RG-LRU width (0 -> d_model)
+    lru_temporal_width: int = 4
+
+    # -- MoE / modality ----------------------------------------------------
+    moe: Optional[MoEConfig] = None
+    mlp_glu: bool = True      # gated (3-matrix) vs plain (2-matrix) MLP
+    n_codebooks: int = 1      # musicgen: parallel EnCodec codebooks
+    frontend: Optional[StubFrontend] = None
+
+    # -- xLSTM -------------------------------------------------------------
+    mlstm_proj_factor: float = 2.0
+    slstm_ff_factor: float = 4.0 / 3.0
+    mlstm_chunk: int = 64
+
+    # -- FedHeN ------------------------------------------------------------
+    exit_layer: int = 0       # K: simple subnet = blocks[:K]; 0 -> n_layers//2
+                              # (rounded down to a period boundary)
+
+    # -- numerics ----------------------------------------------------------
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+
+    # -- sharding hints (resolved by launch/sharding.py) --------------------
+    attn_shard: str = "auto"    # auto | heads | uneven_heads | replicate
+    shard_experts_2d: bool = False  # also shard expert d_ff over data (ZeRO-ish)
+
+    # -- long-context variant ------------------------------------------------
+    longctx_window: int = 8192  # window used when forcing the sliding-window
+                                # variant for long_500k on full-attention archs
+
+    # ------------------------------------------------------------------
+
+    def __post_init__(self):
+        if self.n_heads % self.n_kv_heads != 0:
+            raise ValueError("n_heads must be divisible by n_kv_heads")
+
+    # Derived quantities -------------------------------------------------
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim if self.head_dim else self.d_model // self.n_heads
+
+    @property
+    def resolved_d_rnn(self) -> int:
+        return self.d_rnn if self.d_rnn else self.d_model
+
+    @property
+    def period(self) -> int:
+        return len(self.pattern)
+
+    @property
+    def n_periods(self) -> int:
+        return self.n_layers // self.period
+
+    @property
+    def n_remainder(self) -> int:
+        return self.n_layers % self.period
+
+    @property
+    def resolved_exit_layer(self) -> int:
+        """FedHeN K, rounded down to a period boundary (>= one period)."""
+        k = self.exit_layer if self.exit_layer else self.n_layers // 2
+        k = (k // self.period) * self.period
+        return max(k, self.period)
+
+    @property
+    def exit_period(self) -> int:
+        return self.resolved_exit_layer // self.period
+
+    def layer_spec(self, idx: int) -> LayerSpec:
+        return self.pattern[idx % self.period]
+
+    def jnp_param_dtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    def jnp_compute_dtype(self):
+        return jnp.dtype(self.compute_dtype)
+
+    # Parameter counting (used by comm accounting + roofline) -------------
+
+    def param_count(self) -> int:
+        """Analytical parameter count of the complex model."""
+        d, v = self.d_model, self.vocab_size
+        hd = self.resolved_head_dim
+        total = v * d * self.n_codebooks          # embeddings
+        if not self.tie_embeddings:
+            total += v * d * self.n_codebooks
+        if self.frontend is not None:
+            total += self.frontend.d_in * d       # projector
+        for i in range(self.n_layers):
+            total += self._layer_params(self.layer_spec(i))
+        total += d                                 # final norm
+        total += d                                 # exit norm (FedHeN head)
+        return total
+
+    def _layer_params(self, spec: LayerSpec) -> int:
+        d = self.d_model
+        hd = self.resolved_head_dim
+        n = 0
+        if spec.mixer in (ATTN_GLOBAL, ATTN_LOCAL):
+            n += d * self.n_heads * hd             # Wq
+            n += 2 * d * self.n_kv_heads * hd      # Wk, Wv
+            n += self.n_heads * hd * d             # Wo
+        elif spec.mixer == RGLRU:
+            dr = self.resolved_d_rnn
+            n += 2 * d * dr + dr * d               # in/gate/out proj
+            n += dr * self.lru_temporal_width      # temporal conv
+            n += 3 * dr                            # a, input-gate, rec-gate diag
+        elif spec.mixer == MLSTM:
+            di = int(self.d_model * self.mlstm_proj_factor)
+            n += 2 * d * di                        # up + gate proj
+            n += 3 * di * (di // self.n_heads)     # block-diag q, k, v
+            n += di * 2 * self.n_heads             # i, f gate projections
+            n += di * d                            # down proj
+        elif spec.mixer == SLSTM:
+            nh, dh = self.n_heads, d // self.n_heads
+            n += 4 * d * d                         # i, f, z, o input projections
+            n += 4 * nh * dh * dh                  # recurrent (block-diag)
+            dff = int(d * self.slstm_ff_factor)
+            n += 2 * d * dff                       # post FFN
+        n += 2 * d                                 # pre norms (mixer + mlp)
+        mats = 3 if self.mlp_glu else 2            # (gate,) up, down
+        if spec.mlp == MLP_DENSE:
+            n += mats * d * self.d_ff
+        elif spec.mlp == MLP_MOE:
+            m = self.moe
+            de = m.d_expert or self.d_ff
+            n += d * m.n_experts                   # router
+            n += mats * d * de * (m.n_experts + m.n_shared)
+        return n
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: top_k + shared experts only)."""
+        if self.moe is None:
+            return self.param_count()
+        m = self.moe
+        de = m.d_expert or self.d_ff
+        total = self.param_count()
+        n_moe_layers = sum(
+            1 for i in range(self.n_layers)
+            if self.layer_spec(i).mlp == MLP_MOE
+        )
+        mats = 3 if self.mlp_glu else 2
+        inactive = n_moe_layers * mats * self.d_model * de * (m.n_experts -
+                                                              m.top_k)
+        return total - inactive
+
+    def simple_param_count(self) -> int:
+        """Analytical parameter count of the FedHeN simple subnet."""
+        d, v = self.d_model, self.vocab_size
+        total = v * d * self.n_codebooks
+        if self.frontend is not None:
+            total += self.frontend.d_in * d
+        for i in range(self.resolved_exit_layer):
+            total += self._layer_params(self.layer_spec(i))
+        total += d                                 # exit norm
+        return total
+
+    def with_overrides(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                 # "train" | "prefill" | "decode"
+
+
+TRAIN_4K = InputShape("train_4k", 4_096, 256, "train")
+PREFILL_32K = InputShape("prefill_32k", 32_768, 32, "prefill")
+DECODE_32K = InputShape("decode_32k", 32_768, 128, "decode")
+LONG_500K = InputShape("long_500k", 524_288, 1, "decode")
+
+INPUT_SHAPES = {s.name: s for s in (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)}
+
+
+# ---------------------------------------------------------------------------
+# Federated experiment config (paper §3 + Appendix A)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class FedConfig:
+    """Hyper-parameters of the FedHeN experimental protocol."""
+
+    n_devices: int = 100           # total federated clients
+    n_simple: int = 50             # first 50 simple, rest complex (paper)
+    participation: float = 0.10    # 10% active per round
+    rounds: int = 1000             # T
+    local_epochs: int = 5          # E
+    lr: float = 0.1                # eta
+    clip_norm: float = 10.0        # gradient clipping (Appendix A)
+    batch_size: int = 50
+    dirichlet_alpha: float = 0.3   # non-IID split concentration
+    iid: bool = True
+    algorithm: str = "fedhen"      # fedhen | noside | decouple
+    seed: int = 0
+    skip_nan_devices: bool = True  # Appendix A: drop NaN devices for the round
+    # beyond-paper: FedProx-style proximal term mu/2 ||w - w_server||^2 on
+    # client objectives (Li et al. 2020, the paper's related-work family);
+    # composes with any of the three algorithms.  0 = off (paper setting).
+    prox_mu: float = 0.0

@@ -1,0 +1,38 @@
+"""LLaVA-NeXT 34B-class [vlm] — anyres tiling
+[hf:llava-hf/llava-v1.6-mistral-7b-hf].  Backbone: 60L, d_model 7168,
+56 heads (GQA kv=8), d_ff 20480, vocab 64000.
+
+The vision tower is the sanctioned STUB: ``input_specs`` provides
+precomputed patch embeddings (anyres 4 tiles + base = 5 x 576 = 2880 tokens,
+d_in 1152 SigLIP-class); the backbone owns only the 2-layer-equivalent
+projector (single linear here) and consumes them prepended to the text."""
+
+from repro.configs.base import LayerSpec, ModelConfig, StubFrontend
+
+CONFIG = ModelConfig(
+    name="llava-next-34b",
+    arch_type="vlm",
+    source="hf:llava-hf/llava-v1.6-mistral-7b-hf",
+    n_layers=60,
+    d_model=7168,
+    n_heads=56,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=20_480,
+    vocab_size=64_000,
+    pattern=(LayerSpec("attn"),),
+    frontend=StubFrontend(kind="vision", n_tokens=2880, d_in=1152),
+    param_dtype="bfloat16",
+    # 56 q-heads / 8 kv-heads don't divide the 16-way model axis (and pjit
+    # input shardings cannot pad), so shard head_dim (128/16=8) instead —
+    # scores need an all-reduce over the contracted dim; hillclimb target.
+    attn_shard="head_dim",
+)
+
+
+def reduced() -> ModelConfig:
+    return CONFIG.with_overrides(
+        n_layers=2, d_model=128, n_heads=4, n_kv_heads=2, head_dim=32,
+        d_ff=256, vocab_size=512, exit_layer=1,
+        frontend=StubFrontend(kind="vision", n_tokens=8, d_in=48),
+        param_dtype="float32", compute_dtype="float32")

@@ -1,0 +1,88 @@
+"""Server aggregation — FedHeN Alg. 1 ln. 16-22, plus NoSide and Decouple.
+
+All three operate on a *stacked cohort*: client models share the complex
+treedef with a leading cohort axis ``Z``.  Simple clients' complex-only
+slices are carried untouched (they are weighted out by the masks), so one
+stacked representation serves every algorithm.
+
+The hot path — a weighted masked mean over the cohort axis — is exactly the
+``masked_agg`` Pallas kernel's contract; the XLA path here is its reference
+semantics (and what the dry-run lowers, since Pallas cannot lower on the CPU
+backend).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import masking
+
+Tree = Any
+
+
+def _wmean(stacked: Tree, weights: jax.Array) -> Tree:
+    """Weighted mean over leading cohort axis.  weights: (Z,) already
+    normalized (sums to 1 over the intended group)."""
+    def leaf(x):
+        w = weights.reshape((-1,) + (1,) * (x.ndim - 1)).astype(jnp.float32)
+        # gate before multiplying: a NaN device with weight 0 must not
+        # poison the sum (paper's NaN-device exclusion)
+        xf = jnp.where(w > 0, x.astype(jnp.float32), 0.0)
+        return jnp.sum(xf * w, axis=0).astype(x.dtype)
+    return jax.tree.map(leaf, stacked)
+
+
+def _norm_weights(raw: jax.Array) -> jax.Array:
+    total = jnp.sum(raw)
+    return jnp.where(total > 0, raw / jnp.maximum(total, 1e-12),
+                     jnp.zeros_like(raw))
+
+
+def fedhen_server_update(cohort: Tree, is_simple: jax.Array,
+                         valid: jax.Array, mask: Tree) -> Tree:
+    """FedHeN / NoSide server step (they share it — paper Appendix A).
+
+    cohort: stacked client models (Z, ...) in complex structure.
+    is_simple: (Z,) bool; valid: (Z,) bool (NaN-device exclusion).
+    mask: index-set-M mask tree.
+
+    Returns the new complex server model; the simple server model is its
+    M-slice by construction (invariant tested in tests/test_aggregate.py).
+    """
+    valid_f = valid.astype(jnp.float32)
+    w_all = _norm_weights(valid_f)                          # ln. 18: 1/|Z|
+    w_complex = _norm_weights(valid_f * (~is_simple))       # ln. 22: 1/|Z_c|
+    mean_all = _wmean(cohort, w_all)
+    mean_complex = _wmean(cohort, w_complex)
+    # ln. 18-20: M slice <- mean over ALL devices; ln. 22: M' <- complex mean
+    return masking.where_mask(mask, mean_all, mean_complex)
+
+
+def decouple_server_update(cohort: Tree, is_simple: jax.Array,
+                           valid: jax.Array, mask: Tree) -> Tree:
+    """Decouple (Alg. 3): two independent FedAvg runs in one stacked tree.
+
+    M slice <- mean over simple devices only; M' <- mean over complex only.
+    (The simple server model lives in the M slice; the complex server model's
+    M slice is tracked separately by the caller — see ``ServerState``.)
+    """
+    valid_f = valid.astype(jnp.float32)
+    w_simple = _norm_weights(valid_f * is_simple)
+    w_complex = _norm_weights(valid_f * (~is_simple))
+    mean_simple = _wmean(cohort, w_simple)
+    mean_complex = _wmean(cohort, w_complex)
+    return masking.where_mask(mask, mean_simple, mean_complex), mean_complex
+
+
+def masked_cohort_mean(cohort: Tree, weights_m: jax.Array,
+                       weights_rest: jax.Array, mask: Tree) -> Tree:
+    """General primitive: different cohort weights inside/outside M.
+
+    This is the op the ``masked_agg`` kernel implements on TPU.
+    """
+    mean_m = _wmean(cohort, weights_m)
+    mean_rest = _wmean(cohort, weights_rest)
+    return masking.where_mask(mask, mean_m, mean_rest)

@@ -1,0 +1,253 @@
+"""Federated runtime: local client training, server state, round functions.
+
+Implements the paper's three algorithms over any adapter:
+
+* ``fedhen``   — Alg. 1 + Alg. 2 (side objective on complex devices)
+* ``noside``   — Alg. 4 (HeteroFL-style: same server step, no side objective)
+* ``decouple`` — Alg. 3 (two independent FedAvg runs)
+
+Local training (Alg. 2): E epochs of minibatch SGD, eta, global-norm clip 10,
+per-device NaN exclusion (Appendix A).  A whole cohort trains inside one jit
+as ``vmap`` over clients of a ``scan`` over SGD steps — on the production
+mesh the cohort axis is sharded over ``data``/``pod`` (see launch/), making
+the server aggregation an all-reduce: the communication the paper saves.
+
+Cohort composition is stratified (k_s simple + k_c complex per round, the
+expectation of the paper's uniform 10% sampling) so shapes stay static;
+``sample_uniform=True`` recovers uniform sampling via validity-weight
+padding.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FedConfig
+from repro.core import aggregate, masking
+from repro.optim.sgd import sgd_update
+
+Tree = Any
+Batch = Dict[str, jax.Array]
+
+
+# ---------------------------------------------------------------------------
+# Local client optimization (Alg. 2)
+# ---------------------------------------------------------------------------
+
+def make_client_trainer(loss_fn: Callable[[Tree, Batch], jax.Array],
+                        fed: FedConfig):
+    """Returns train(params, data, rng) -> (params', mean_loss).
+
+    data: dict of arrays with leading dim N_i (the client's local dataset).
+    Runs E epochs of shuffled minibatch SGD with global-norm clipping.
+    """
+
+    def train(params: Tree, data: Batch, rng: jax.Array):
+        n = jax.tree.leaves(data)[0].shape[0]
+        steps = max(n // fed.batch_size, 1)
+        server_params = params  # the received server model (FedProx anchor)
+
+        def full_loss(p, batch):
+            loss = loss_fn(p, batch)
+            if fed.prox_mu:
+                sq = sum(jnp.sum(jnp.square(a.astype(jnp.float32) -
+                                            b.astype(jnp.float32)))
+                         for a, b in zip(jax.tree.leaves(p),
+                                         jax.tree.leaves(server_params)))
+                loss = loss + 0.5 * fed.prox_mu * sq
+            return loss
+
+        def epoch(params, key):
+            perm = jax.random.permutation(key, n)
+            idxs = perm[:steps * fed.batch_size].reshape(steps,
+                                                         fed.batch_size)
+
+            def step(params, idx):
+                batch = jax.tree.map(lambda x: jnp.take(x, idx, axis=0), data)
+                loss, grads = jax.value_and_grad(full_loss)(params, batch)
+                return sgd_update(params, grads, fed.lr, fed.clip_norm), loss
+
+            return jax.lax.scan(step, params, idxs)
+
+        keys = jax.random.split(rng, fed.local_epochs)
+        params, losses = jax.lax.scan(epoch, params, keys)
+        return params, jnp.mean(losses)
+
+    return train
+
+
+# ---------------------------------------------------------------------------
+# Server state
+# ---------------------------------------------------------------------------
+
+@dataclass
+class ServerState:
+    """``complex`` is the server complex model; for fedhen/noside the server
+    simple model IS its M slice (Alg. 1 ln. 20 invariant).  Decouple keeps an
+    independent ``simple_host`` (complex-structured; only its M slice is
+    meaningful)."""
+    complex: Tree
+    simple_host: Optional[Tree] = None
+    round: int = 0
+
+
+# ---------------------------------------------------------------------------
+# Round functions
+# ---------------------------------------------------------------------------
+
+class FederatedTrainer:
+    """Drives T rounds of any of the three algorithms (paper protocol)."""
+
+    def __init__(self, adapter, fed: FedConfig,
+                 client_data: List[Batch], *,
+                 rng: Optional[jax.Array] = None):
+        if fed.algorithm not in ("fedhen", "noside", "decouple"):
+            raise ValueError(fed.algorithm)
+        self.adapter = adapter
+        self.fed = fed
+        self.client_data = client_data
+        self.rng = np.random.default_rng(fed.seed)
+        key = rng if rng is not None else jax.random.PRNGKey(fed.seed)
+        self.server = ServerState(complex=adapter.init(key))
+        if fed.algorithm == "decouple":
+            self.server.simple_host = jax.tree.map(jnp.copy,
+                                                   self.server.complex)
+        self.mask = adapter.subnet_mask(self.server.complex)
+        self.k_simple = max(int(round(fed.participation * fed.n_simple)), 1)
+        n_complex = fed.n_devices - fed.n_simple
+        self.k_complex = max(int(round(fed.participation * n_complex)), 1)
+        self.bytes_per_round = self._bytes_per_round()
+        self.total_bytes = 0.0
+        self._round_fn = jax.jit(self._make_round_fn())
+
+    # -- communication accounting ------------------------------------------
+
+    def _bytes_per_round(self) -> float:
+        params = self.server.complex
+        total = sum(x.size * x.dtype.itemsize
+                    for x in jax.tree.leaves(params))
+        simple = 0
+        for m, x in zip(jax.tree.leaves(self.mask),
+                        jax.tree.leaves(params)):
+            simple += int(np.sum(np.broadcast_to(np.asarray(m), x.shape))
+                          ) * x.dtype.itemsize
+        # down + up for each active device
+        return 2.0 * (self.k_simple * simple + self.k_complex * total)
+
+    # -- the jitted round ----------------------------------------------------
+
+    def _make_round_fn(self):
+        adapter, fed, mask = self.adapter, self.fed, self.mask
+        algo = fed.algorithm
+        train_simple = make_client_trainer(adapter.loss_simple, fed)
+        complex_loss = (adapter.loss_side if algo == "fedhen"
+                        else adapter.loss_complex)
+        train_complex = make_client_trainer(complex_loss, fed)
+
+        def round_fn(complex_params: Tree, simple_host: Optional[Tree],
+                     data_s: Batch, data_c: Batch, rng: jax.Array):
+            ks, kc = self.k_simple, self.k_complex
+            rs, rc = jax.random.split(rng)
+
+            def tile(tree, k):
+                return jax.tree.map(
+                    lambda x: jnp.broadcast_to(x[None], (k,) + x.shape), tree)
+
+            src_simple = simple_host if algo == "decouple" else complex_params
+            cohort_s, loss_s = jax.vmap(train_simple)(
+                tile(src_simple, ks), data_s, jax.random.split(rs, ks))
+            cohort_c, loss_c = jax.vmap(train_complex)(
+                tile(complex_params, kc), data_c, jax.random.split(rc, kc))
+
+            cohort = jax.tree.map(lambda a, b: jnp.concatenate([a, b], 0),
+                                  cohort_s, cohort_c)
+            is_simple = jnp.arange(ks + kc) < ks
+            valid = jax.vmap(masking.tree_isfinite)(cohort)
+            if not fed.skip_nan_devices:
+                valid = jnp.ones_like(valid)
+
+            if algo in ("fedhen", "noside"):
+                new_complex = aggregate.fedhen_server_update(
+                    cohort, is_simple, valid, mask)
+                new_simple_host = None
+            else:
+                new_simple_host, new_complex = aggregate.decouple_server_update(
+                    cohort, is_simple, valid, mask)
+            metrics = {"loss_simple": jnp.mean(loss_s),
+                       "loss_complex": jnp.mean(loss_c),
+                       "n_valid": jnp.sum(valid)}
+            return new_complex, new_simple_host, metrics
+
+        return round_fn
+
+    # -- sampling + gather (host side; this is the "data loading" tier) -----
+
+    def _sample_cohort(self):
+        fed = self.fed
+        simple_ids = self.rng.choice(fed.n_simple, self.k_simple,
+                                     replace=False)
+        complex_ids = fed.n_simple + self.rng.choice(
+            fed.n_devices - fed.n_simple, self.k_complex, replace=False)
+        return simple_ids, complex_ids
+
+    def _gather(self, ids) -> Batch:
+        datasets = [self.client_data[i] for i in ids]
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *datasets)
+
+    # -- public API ----------------------------------------------------------
+
+    def run_round(self) -> Dict[str, float]:
+        simple_ids, complex_ids = self._sample_cohort()
+        data_s = self._gather(simple_ids)
+        data_c = self._gather(complex_ids)
+        key = jax.random.PRNGKey(self.fed.seed * 100003 + self.server.round)
+        new_complex, new_simple_host, metrics = self._round_fn(
+            self.server.complex, self.server.simple_host, data_s, data_c, key)
+        self.server = ServerState(complex=new_complex,
+                                  simple_host=new_simple_host,
+                                  round=self.server.round + 1)
+        self.total_bytes += self.bytes_per_round
+        return {k: float(v) for k, v in metrics.items()}
+
+    def evaluate(self, test_batch: Batch) -> Dict[str, float]:
+        """Server-model metrics.  For decouple, the simple accuracy comes
+        from the simple host; otherwise from the complex model's M slice
+        (which IS the server simple model)."""
+        m = {k: float(v) for k, v in
+             self.adapter.evaluate(self.server.complex, test_batch).items()}
+        if self.fed.algorithm == "decouple":
+            ms = self.adapter.evaluate(self.server.simple_host, test_batch)
+            m["acc_simple"] = float(ms["acc_simple"])
+        m["mbytes"] = self.total_bytes / 1e6
+        return m
+
+    def run(self, rounds: int, *, eval_every: int = 0,
+            test_batch: Optional[Batch] = None,
+            log: Optional[Callable[[str], None]] = None) -> List[Dict]:
+        history = []
+        for r in range(rounds):
+            metrics = self.run_round()
+            if eval_every and test_batch is not None and \
+                    (r + 1) % eval_every == 0:
+                metrics.update(self.evaluate(test_batch))
+            metrics["round"] = self.server.round
+            history.append(metrics)
+            if log and (eval_every and (r + 1) % eval_every == 0):
+                log(f"round {self.server.round}: " + ", ".join(
+                    f"{k}={v:.4f}" for k, v in metrics.items()
+                    if k != "round"))
+        return history
+
+
+def rounds_to_target(history: List[Dict], key: str, target: float) -> int:
+    """Paper's evaluation metric: first round reaching the target accuracy."""
+    for h in history:
+        if key in h and h[key] >= target:
+            return h["round"]
+    return -1

@@ -1,0 +1,136 @@
+"""Pallas TPU kernel: sliding-window flash attention (GQA, softcap).
+
+TPU adaptation notes (vs the CUDA flash-attention the zoo's papers assume):
+
+* TPU grids execute **sequentially** over the minor grid dimension, so the
+  online-softmax accumulation state (m, l, acc) lives in VMEM scratch and
+  is carried across the k-block grid dimension — no atomics, no shared-mem
+  tiling, no warp shuffles.
+* Tiles are MXU-aligned: the score tile is (G*block_q, block_k) so grouped
+  (GQA) queries share their kv tile inside one matmul.
+* The sliding window masks out-of-window k-blocks; TPU grids are static so
+  masked blocks still iterate — the XLA wrapper narrows the k-range where
+  window << S (see ops.py).
+
+Forward only: training uses the XLA path (exact backward); this kernel is
+the serving/prefill hot path.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0 ** 30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, out_ref, m_scr, l_scr, acc_scr, *,
+                  block_q: int, block_k: int, n_kblocks: int, window: int,
+                  softcap: float, scale: float):
+    kb = pl.program_id(2)
+
+    @pl.when(kb == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    g = q_ref.shape[1]
+    dh = q_ref.shape[-1]
+    q = q_ref[0].reshape(g * block_q, dh).astype(jnp.float32)
+    k = k_ref[0, 0].astype(jnp.float32)              # (block_k, Dh)
+    v = v_ref[0, 0].astype(jnp.float32)
+
+    logits = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale  # (G*bq, bk)
+    if softcap:
+        logits = jnp.tanh(logits / softcap) * softcap
+
+    qb = pl.program_id(1)
+    rows = jax.lax.broadcasted_iota(jnp.int32, (g * block_q, 1), 0)
+    q_pos = qb * block_q + rows % block_q            # group-major rows
+    k_pos = kb * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (1, block_k), 1)
+    delta = q_pos - k_pos
+    mask = delta >= 0
+    if window:
+        mask &= delta < window
+    logits = jnp.where(mask, logits, NEG_INF)
+
+    m_prev = m_scr[...]                              # (G*bq, 1)
+    m_cur = jnp.max(logits, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(logits - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = alpha * l_scr[...] + jnp.sum(p, axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(kb == n_kblocks - 1)
+    def _finalize():
+        out = acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
+        out_ref[0] = out.reshape(g, block_q, dh).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "softcap", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           window: int = 0, softcap: float = 0.0,
+                           block_q: int = 256, block_k: int = 256,
+                           interpret: bool = False) -> jax.Array:
+    """q: (B, S, H, Dh); k/v: (B, S, Kh, Dh) -> (B, S, H, Dh).
+
+    Causal; ``window`` > 0 adds the sliding-window constraint.
+    """
+    b, s, h, dh = q.shape
+    kh = k.shape[2]
+    g = h // kh
+    block_q = min(block_q, s)
+    block_k = min(block_k, s)
+    if s % block_q or s % block_k:
+        raise ValueError(f"S={s} must divide block sizes "
+                         f"({block_q}, {block_k})")
+    n_qblocks = s // block_q
+    n_kblocks = s // block_k
+    scale = dh ** -0.5
+
+    # (B, S, Kh|H, Dh) -> (B*Kh, G|1, S, Dh): batch x kv-head on grid dim 0,
+    # GQA groups ride inside the q tile.
+    qx = q.reshape(b, s, kh, g, dh).transpose(0, 2, 3, 1, 4) \
+          .reshape(b * kh, g, s, dh)
+    kx = k.transpose(0, 2, 1, 3).reshape(b * kh, 1, s, dh)
+    vx = v.transpose(0, 2, 1, 3).reshape(b * kh, 1, s, dh)
+
+    kernel = functools.partial(
+        _flash_kernel, block_q=block_q, block_k=block_k,
+        n_kblocks=n_kblocks, window=window, softcap=softcap, scale=scale)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * kh, n_qblocks, n_kblocks),
+        in_specs=[
+            pl.BlockSpec((1, g, block_q, dh),
+                         lambda bk, qb, kb: (bk, 0, qb, 0)),
+            pl.BlockSpec((1, 1, block_k, dh),
+                         lambda bk, qb, kb: (bk, 0, kb, 0)),
+            pl.BlockSpec((1, 1, block_k, dh),
+                         lambda bk, qb, kb: (bk, 0, kb, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, g, block_q, dh),
+                               lambda bk, qb, kb: (bk, 0, qb, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * kh, g, s, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g * block_q, 1), jnp.float32),
+            pltpu.VMEM((g * block_q, 1), jnp.float32),
+            pltpu.VMEM((g * block_q, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qx, kx, vx)
+    out = out.reshape(b, kh, g, s, dh).transpose(0, 3, 1, 2, 4)
+    return out.reshape(b, s, h, dh)

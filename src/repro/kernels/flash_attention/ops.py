@@ -1,0 +1,25 @@
+"""Jit'd wrapper for the flash attention kernel with backend dispatch.
+
+On TPU the Pallas kernel runs; elsewhere the XLA chunked implementation
+(models/attention.py) serves the same contract.  ``interpret=True``
+exercises the kernel body on CPU (tests / debugging).
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.models.attention import chunked_causal_attention
+
+
+def flash_attention(q, k, v, *, window: int = 0, softcap: float = 0.0,
+                    force_pallas_interpret: bool = False):
+    if force_pallas_interpret:
+        return flash_attention_pallas(q, k, v, window=window,
+                                      softcap=softcap, interpret=True)
+    if jax.default_backend() == "tpu":
+        return flash_attention_pallas(q, k, v, window=window,
+                                      softcap=softcap)
+    return chunked_causal_attention(q, k, v, window=window,
+                                    softcap_val=softcap)

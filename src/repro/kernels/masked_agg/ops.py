@@ -1,0 +1,49 @@
+"""Jit'd wrapper: masked cohort aggregation over parameter pytrees.
+
+Backend selection: the Pallas kernel targets TPU; on CPU (this container)
+the XLA reference path runs instead — set ``force_pallas_interpret=True``
+to exercise the kernel body in interpret mode (tests do).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.masked_agg.kernel import masked_agg_pallas
+from repro.kernels.masked_agg.ref import masked_agg_ref
+
+Tree = Any
+
+
+def _use_pallas() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def masked_agg_leaf(x: jax.Array, mask: jax.Array, w_m: jax.Array,
+                    w_rest: jax.Array, *,
+                    force_pallas_interpret: bool = False) -> jax.Array:
+    """One stacked leaf: x (Z, ...) + broadcastable mask -> aggregated (…)."""
+    z = x.shape[0]
+    body = x.reshape(z, -1)
+    # mask is broadcastable against one cohort member's shape (x.shape[1:])
+    mask_flat = jnp.broadcast_to(jnp.asarray(mask),
+                                 x.shape[1:]).reshape(-1)
+    if force_pallas_interpret:
+        out = masked_agg_pallas(body, mask_flat, w_m, w_rest, interpret=True)
+    elif _use_pallas():
+        out = masked_agg_pallas(body, mask_flat, w_m, w_rest)
+    else:
+        out = masked_agg_ref(body, mask_flat, w_m, w_rest)
+    return out.reshape(x.shape[1:])
+
+
+def masked_agg_tree(cohort: Tree, mask_tree: Tree, w_m: jax.Array,
+                    w_rest: jax.Array, **kw) -> Tree:
+    """Apply the aggregation across a stacked cohort pytree (FedHeN server
+    step: w_m = valid/|Z| weights, w_rest = complex-only weights)."""
+    return jax.tree.map(
+        lambda x, m: masked_agg_leaf(x, m, w_m, w_rest, **kw),
+        cohort, mask_tree)

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the masked cohort aggregation (FedHeN Alg. 1).
+
+Contract (per flattened parameter leaf):
+
+    out[n] = sum_z x[z, n] * (mask[n] ? w_m[z] : w_rest[z])
+
+which implements server lines 18 + 22 in one pass: inside the index set M
+the cohort is averaged with ``w_m`` (all active devices, 1/|Z|), outside M
+with ``w_rest`` (complex devices only, 1/|Z_c|).  Weights of NaN-skipped
+devices are zero; inputs of zero-weight devices are gated before the
+multiply so non-finite values cannot poison the sum.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def masked_agg_ref(x: jnp.ndarray, mask: jnp.ndarray, w_m: jnp.ndarray,
+                   w_rest: jnp.ndarray) -> jnp.ndarray:
+    """x: (Z, N); mask: (N,) bool; w_m/w_rest: (Z,) f32 -> (N,) in x.dtype."""
+    xf = x.astype(jnp.float32)
+    w = jnp.where(mask[None, :], w_m[:, None], w_rest[:, None])
+    xf = jnp.where(w > 0, xf, 0.0)
+    return jnp.sum(xf * w, axis=0).astype(x.dtype)

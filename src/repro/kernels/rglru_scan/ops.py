@@ -1,0 +1,26 @@
+"""Jit'd wrapper for the RG-LRU recurrence with backend dispatch.
+
+TPU -> Pallas carry-in-VMEM kernel; CPU -> the associative-scan XLA path
+used by models/rglru.py (log-depth, good on CPU/GPU).
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.rglru_scan.kernel import lru_scan_pallas
+
+
+def lru_scan(a, b, *, force_pallas_interpret: bool = False):
+    if force_pallas_interpret:
+        return lru_scan_pallas(a, b, interpret=True)
+    if jax.default_backend() == "tpu":
+        return lru_scan_pallas(a, b)
+
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, a2 * b1 + b2
+
+    _, y = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return y

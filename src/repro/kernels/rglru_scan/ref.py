@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the RG-LRU linear-recurrence kernel.
+
+    y_t = a_t * y_{t-1} + b_t        (elementwise, per channel)
+
+Sequential implementation — intentionally the dumbest possible version.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lru_scan_ref(a: jax.Array, b: jax.Array,
+                 y0: jax.Array | None = None) -> jax.Array:
+    """a, b: (B, S, D) f32 -> y: (B, S, D)."""
+    bsz, s, d = a.shape
+    y = jnp.zeros((bsz, d), jnp.float32) if y0 is None else y0
+    ys = []
+    for t in range(s):
+        y = a[:, t] * y + b[:, t]
+        ys.append(y)
+    return jnp.stack(ys, axis=1)

@@ -1,0 +1,81 @@
+"""Production step functions — what the dry-run lowers and the drivers run.
+
+* ``train_step`` — the FedHeN complex-device step: one side-objective SGD
+  step (final CE + early-exit CE, clip 10, eta).  This is the per-device
+  inner step of Alg. 2 ``ClientTrainingSideObj`` at production scale; the
+  cohort/round structure wraps it in core/federated.py.
+* ``baseline_train_step`` — same without the side objective (NoSide /
+  Decouple inner step) — used to measure the side objective's marginal cost.
+* ``prefill_step`` — logits + decode cache for a prompt batch.
+* ``serve_step`` — ONE token against a seq_len cache (decode shapes).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.core.adapters import LMAdapter
+from repro.models import transformer as tfm
+from repro.models.common import NO_POLICY, Policy
+from repro.optim.sgd import sgd_update
+
+Tree = Any
+
+
+def make_train_step(cfg: ModelConfig, policy: Policy = NO_POLICY, *,
+                    lr: float = 0.1, clip_norm: float = 10.0,
+                    side_objective: bool = True, remat: bool = True):
+    adapter = LMAdapter(cfg, policy=policy, remat=remat)
+    loss_fn = adapter.loss_side if side_objective else adapter.loss_complex
+
+    def train_step(params: Tree, batch: Dict[str, jax.Array]):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        new_params = sgd_update(params, grads, lr, clip_norm)
+        return new_params, {"loss": loss}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, policy: Policy = NO_POLICY, *,
+                      window_override: Optional[int] = None,
+                      cache_len: Optional[int] = None):
+    def prefill_step(params: Tree, batch: Dict[str, jax.Array]):
+        logits, cache = tfm.prefill(params, cfg, batch["tokens"],
+                                    extra_embeds=batch.get("extra_embeds"),
+                                    policy=policy,
+                                    window_override=window_override,
+                                    cache_len=cache_len)
+        return logits, cache
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, policy: Policy = NO_POLICY, *,
+                    window_override: Optional[int] = None,
+                    with_exit_head: bool = False):
+    def serve_step(params: Tree, cache: Tree, batch: Dict[str, jax.Array],
+                   pos: jax.Array):
+        return tfm.decode_step(params, cache, cfg, batch["tokens"], pos,
+                               policy=policy,
+                               window_override=window_override,
+                               with_exit_head=with_exit_head)
+
+    return serve_step
+
+
+def step_for_shape(cfg: ModelConfig, shape: InputShape,
+                   policy: Policy = NO_POLICY, *,
+                   window_override: Optional[int] = None,
+                   side_objective: bool = True):
+    """The step function a given input shape exercises."""
+    if shape.kind == "train":
+        return make_train_step(cfg, policy, side_objective=side_objective)
+    if shape.kind == "prefill":
+        return make_prefill_step(cfg, policy,
+                                 window_override=window_override)
+    return make_serve_step(cfg, policy, window_override=window_override)

@@ -1,0 +1,166 @@
+"""PreActResNet18 with GroupNorm — the paper's experimental model (§3).
+
+* Complex architecture: PreActResNet18 (He et al. 2016), 4 stages x 2
+  pre-activation basic blocks, channels (64, 128, 256, 512), ~11.1M params.
+  BatchNorm is replaced by GroupNorm everywhere (paper footnote 1).
+* Simple architecture: the first 2 stages, followed by a *mix pooling* layer
+  (Lee et al. 2016 — learned convex combination of avg and max pooling, as
+  used by Kaya et al. 2019) and a linear classifier; ~0.7M params.
+
+Per FedHeN Assumption 2.1 the complex parameter vector *contains* the simple
+one: the mix-pool/exit head lives inside the complex params (it is exercised
+by the side objective) and the index set M selects
+``stem + stage1 + stage2 + exit head``.
+
+Layout: channels-last (B, H, W, C); convs via ``lax.conv_general_dilated``.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+
+Params = Dict[str, Any]
+
+STAGE_CHANNELS = (64, 128, 256, 512)
+BLOCKS_PER_STAGE = 2
+SIMPLE_STAGES = 2          # paper: first 2 residual stages
+
+
+def _conv_init(key, kh, kw, cin, cout):
+    fan_in = kh * kw * cin
+    std = (2.0 / fan_in) ** 0.5
+    return jax.random.normal(key, (kh, kw, cin, cout), jnp.float32) * std
+
+
+def conv2d(x, w, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+# ---------------------------------------------------------------------------
+# Pre-activation basic block
+# ---------------------------------------------------------------------------
+
+def init_block(key, cin, cout, stride) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "gn1": common.init_groupnorm(cin, jnp.float32),
+        "conv1": _conv_init(k1, 3, 3, cin, cout),
+        "gn2": common.init_groupnorm(cout, jnp.float32),
+        "conv2": _conv_init(k2, 3, 3, cout, cout),
+    }
+    if stride != 1 or cin != cout:
+        p["shortcut"] = _conv_init(k3, 1, 1, cin, cout)
+    return p
+
+
+def apply_block(p: Params, x, stride):
+    h = jax.nn.relu(common.apply_groupnorm(p["gn1"], x))
+    shortcut = conv2d(h, p["shortcut"], stride) if "shortcut" in p else x
+    h = conv2d(h, p["conv1"], stride)
+    h = jax.nn.relu(common.apply_groupnorm(p["gn2"], h))
+    h = conv2d(h, p["conv2"], 1)
+    return h + shortcut
+
+
+# ---------------------------------------------------------------------------
+# Mix pooling head (Lee et al. 2016): alpha * avg + (1 - alpha) * max
+# ---------------------------------------------------------------------------
+
+def init_mixpool_head(key, channels, n_classes) -> Params:
+    return {
+        "alpha": jnp.zeros((), jnp.float32),      # sigmoid(0) = 0.5 mix
+        "w": common.dense_init(key, (channels, n_classes), jnp.float32),
+        "b": jnp.zeros((n_classes,), jnp.float32),
+    }
+
+
+def apply_mixpool_head(p: Params, x) -> jax.Array:
+    a = jax.nn.sigmoid(p["alpha"])
+    avg = jnp.mean(x, axis=(1, 2))
+    mx = jnp.max(x, axis=(1, 2))
+    pooled = a * avg + (1.0 - a) * mx
+    return pooled @ p["w"] + p["b"]
+
+
+# ---------------------------------------------------------------------------
+# Full model
+# ---------------------------------------------------------------------------
+
+def init_params(key, n_classes: int = 10) -> Params:
+    keys = jax.random.split(key, 16)
+    params: Params = {"stem": _conv_init(keys[0], 3, 3, 3, 64)}
+    ki = 1
+    cin = 64
+    for s, cout in enumerate(STAGE_CHANNELS):
+        blocks = []
+        for b in range(BLOCKS_PER_STAGE):
+            stride = 2 if (s > 0 and b == 0) else 1
+            blocks.append(init_block(keys[ki], cin, cout, stride))
+            ki += 1
+            cin = cout
+        params[f"stage{s + 1}"] = blocks
+    params["final_gn"] = common.init_groupnorm(512, jnp.float32)
+    params["head"] = {
+        "w": common.dense_init(keys[ki], (512, n_classes), jnp.float32),
+        "b": jnp.zeros((n_classes,), jnp.float32),
+    }
+    # FedHeN simple/exit head: mix pooling + linear on stage-2 output
+    params["exit_head"] = init_mixpool_head(
+        keys[ki + 1], STAGE_CHANNELS[SIMPLE_STAGES - 1], n_classes)
+    return params
+
+
+def _run_stages(params: Params, x, n_stages: int):
+    h = conv2d(x, params["stem"], 1)
+    for s in range(n_stages):
+        for b, blk in enumerate(params[f"stage{s + 1}"]):
+            stride = 2 if (s > 0 and b == 0) else 1
+            h = apply_block(blk, h, stride)
+    return h
+
+
+def forward(params: Params, images) -> Tuple[jax.Array, jax.Array]:
+    """images: (B, 32, 32, 3).  Returns (exit_logits, final_logits).
+
+    One pass: the simple sub-network is a prefix, so the side objective's
+    logits come from the stage-2 activation for free.
+    """
+    h = conv2d(images, params["stem"], 1)
+    for s in range(len(STAGE_CHANNELS)):
+        for b, blk in enumerate(params[f"stage{s + 1}"]):
+            stride = 2 if (s > 0 and b == 0) else 1
+            h = apply_block(blk, h, stride)
+        if s + 1 == SIMPLE_STAGES:
+            exit_logits = apply_mixpool_head(params["exit_head"], h)
+    h = jax.nn.relu(common.apply_groupnorm(params["final_gn"], h))
+    final_logits = jnp.mean(h, axis=(1, 2)) @ params["head"]["w"] \
+        + params["head"]["b"]
+    return exit_logits, final_logits
+
+
+def forward_simple(params: Params, images) -> jax.Array:
+    """Simple-architecture forward (works on extracted simple params too)."""
+    h = _run_stages(params, images, SIMPLE_STAGES)
+    return apply_mixpool_head(params["exit_head"], h)
+
+
+def subnet_mask(params: Params) -> Params:
+    """FedHeN index set M: stem + stage1 + stage2 + exit head."""
+    def mark(path_has_simple):
+        return path_has_simple
+
+    mask = jax.tree.map(lambda _: False, params)
+    for key in ("stem", "stage1", "stage2", "exit_head"):
+        mask[key] = jax.tree.map(lambda _: True, params[key])
+    return mask
+
+
+def param_count(params: Params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))

@@ -1,0 +1,143 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Block layout (as in RecurrentGemma):
+
+    h -> W_in -> causal depthwise conv1d(width 4) -> RG-LRU -> * gelu(W_gate h) -> W_out
+
+RG-LRU recurrence (diagonal, per-channel):
+
+    r_t = sigmoid(w_r * x_t + b_r)              recurrence gate
+    i_t = sigmoid(w_i * x_t + b_i)              input gate
+    log a_t = -c * softplus(lam) * r_t          c = 8
+    y_t = a_t * y_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+The sequence dimension is parallelized with ``jax.lax.associative_scan``
+(first-order linear recurrence composition) for train/prefill; decode is the
+single-step recurrence carrying ``(y, conv window)`` state.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common
+from repro.models.common import Policy, NO_POLICY
+
+_C = 8.0
+
+
+def init_rglru(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    dr = cfg.resolved_d_rnn
+    tw = cfg.lru_temporal_width
+    dt = cfg.jnp_param_dtype()
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    # lam init so that a^c spans ~(0.9, 0.999) as in the Griffin paper
+    u = jax.random.uniform(k5, (dr,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / _C))   # softplus^-1(-log(u)/c)
+    return {
+        "w_in": common.dense_init(k1, (d, dr), dt),
+        "w_gate": common.dense_init(k2, (d, dr), dt),
+        "w_out": common.dense_init(k3, (dr, d), dt, fan_in=dr),
+        "conv": (common.dense_init(k4, (tw, dr), dt, fan_in=tw)),
+        "w_r": jnp.zeros((dr,), jnp.float32),
+        "b_r": jnp.zeros((dr,), jnp.float32),
+        "w_i": jnp.zeros((dr,), jnp.float32),
+        "b_i": jnp.zeros((dr,), jnp.float32),
+        "lam": lam.astype(jnp.float32),
+    }
+
+
+def _gates(p: dict, x: jax.Array):
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(p["w_r"] * xf + p["b_r"])
+    i = jax.nn.sigmoid(p["w_i"] * xf + p["b_i"])
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * xf)
+    return a, b
+
+
+def lru_scan(p: dict, x: jax.Array,
+             y0: Optional[jax.Array] = None) -> jax.Array:
+    """Linear recurrence over (B, S, Dr) via associative scan."""
+    a, b = _gates(p, x)
+    if y0 is not None:
+        # fold the initial state into the first step: y_1 = a_1 y_0 + b_1
+        b = b.at[:, 0].add(a[:, 0] * y0.astype(jnp.float32))
+
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, a2 * b1 + b2
+
+    _, y = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return y.astype(x.dtype)
+
+
+def _causal_conv(p: dict, x: jax.Array,
+                 window: Optional[jax.Array] = None) -> jax.Array:
+    """Depthwise causal conv, width tw.  window: (B, tw-1, Dr) history."""
+    w = p["conv"].astype(x.dtype)                  # (tw, Dr)
+    tw = w.shape[0]
+    if window is None:
+        pad = jnp.zeros((x.shape[0], tw - 1, x.shape[-1]), x.dtype)
+    else:
+        pad = window.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)         # (B, S + tw - 1, Dr)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(tw))
+    return out
+
+
+def apply_rglru(p: dict, h_in: jax.Array, cfg: ModelConfig,
+                policy: Policy = NO_POLICY, return_state: bool = False):
+    """Train/prefill path. h_in: (B, S, D) -> (B, S, D).
+
+    ``return_state=True`` also returns the decode cache (final recurrent
+    state + conv history) for prefill -> decode handoff."""
+    x = jnp.einsum("bsd,dr->bsr", h_in, p["w_in"].astype(h_in.dtype))
+    x = policy.constrain(x, ("batch", "seq", "rnn"))
+    g = jnp.einsum("bsd,dr->bsr", h_in, p["w_gate"].astype(h_in.dtype))
+    xc = _causal_conv(p, x)
+    y = lru_scan(p, xc)
+    out = y * jax.nn.gelu(g)
+    out = policy.constrain(out, ("batch", "seq", "rnn"))
+    out = jnp.einsum("bsr,rd->bsd", out, p["w_out"].astype(out.dtype))
+    if return_state:
+        tw = cfg.lru_temporal_width
+        state = {"y": y[:, -1].astype(jnp.float32),
+                 "conv": x[:, -(tw - 1):].astype(cfg.jnp_compute_dtype())}
+        return out, state
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+def init_rglru_cache(cfg: ModelConfig, batch: int) -> dict:
+    dr = cfg.resolved_d_rnn
+    tw = cfg.lru_temporal_width
+    dt = cfg.jnp_compute_dtype()
+    return {"y": jnp.zeros((batch, dr), jnp.float32),
+            "conv": jnp.zeros((batch, tw - 1, dr), dt)}
+
+
+def apply_rglru_decode(p: dict, h_in: jax.Array, cache: dict,
+                       cfg: ModelConfig,
+                       policy: Policy = NO_POLICY) -> Tuple[jax.Array, dict]:
+    """One step. h_in: (B, 1, D) -> ((B, 1, D), new cache)."""
+    x = jnp.einsum("bsd,dr->bsr", h_in, p["w_in"].astype(h_in.dtype))
+    g = jnp.einsum("bsd,dr->bsr", h_in, p["w_gate"].astype(h_in.dtype))
+    new_window = jnp.concatenate([cache["conv"], x.astype(cache["conv"].dtype)],
+                                 axis=1)[:, 1:]
+    xc = _causal_conv(p, x, window=cache["conv"])  # (B, 1, Dr)
+    a, b = _gates(p, xc[:, 0])
+    y = a * cache["y"] + b                          # (B, Dr) f32
+    out = y[:, None].astype(h_in.dtype) * jax.nn.gelu(g)
+    out = jnp.einsum("bsr,rd->bsd", out, p["w_out"].astype(out.dtype))
+    return out, {"y": y, "conv": new_window}

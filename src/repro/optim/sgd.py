@@ -1,0 +1,93 @@
+"""Optimizers.  The paper trains with plain SGD (eta = 0.1) and global-norm
+gradient clipping at 10 (Appendix A).  AdamW is provided for the beyond-paper
+centralized/e2e drivers.  All are stateless-or-explicit-state pure functions
+so they jit/scan cleanly and keep the 1T-param SGD path zero-state."""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Tree = Any
+
+
+def global_norm(tree: Tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads: Tree, max_norm: float) -> Tuple[Tree, jax.Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), norm
+
+
+def sgd_update(params: Tree, grads: Tree, lr: float,
+               clip_norm: Optional[float] = None) -> Tree:
+    """w <- w - lr * clip(g).  Arithmetic in fp32, stored in param dtype."""
+    if clip_norm:
+        grads, _ = clip_by_global_norm(grads, clip_norm)
+    return jax.tree.map(
+        lambda w, g: (w.astype(jnp.float32)
+                      - lr * g.astype(jnp.float32)).astype(w.dtype),
+        params, grads)
+
+
+# ---------------------------------------------------------------------------
+# AdamW (beyond-paper, for the centralized reference runs)
+# ---------------------------------------------------------------------------
+
+class AdamState(NamedTuple):
+    step: jax.Array
+    mu: Tree
+    nu: Tree
+
+
+def adam_init(params: Tree) -> AdamState:
+    zeros = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), params)
+    return AdamState(jnp.zeros((), jnp.int32), zeros,
+                     jax.tree.map(jnp.copy, zeros))
+
+
+def adam_update(params: Tree, grads: Tree, state: AdamState, lr: float, *,
+                b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+                weight_decay: float = 0.0,
+                clip_norm: Optional[float] = None) -> Tuple[Tree, AdamState]:
+    if clip_norm:
+        grads, _ = clip_by_global_norm(grads, clip_norm)
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                      state.mu, grads)
+    nu = jax.tree.map(
+        lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+        state.nu, grads)
+
+    def upd(w, m, v):
+        mhat = m / (1 - b1 ** t)
+        vhat = v / (1 - b2 ** t)
+        delta = mhat / (jnp.sqrt(vhat) + eps)
+        if weight_decay:
+            delta = delta + weight_decay * w.astype(jnp.float32)
+        return (w.astype(jnp.float32) - lr * delta).astype(w.dtype)
+
+    return jax.tree.map(upd, params, mu, nu), AdamState(step, mu, nu)
+
+
+# ---------------------------------------------------------------------------
+# Schedules
+# ---------------------------------------------------------------------------
+
+def cosine_schedule(base_lr: float, warmup: int, total: int):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / jnp.maximum(warmup, 1)
+        frac = (step - warmup) / jnp.maximum(total - warmup, 1)
+        frac = jnp.clip(frac, 0.0, 1.0)
+        cos = base_lr * 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup, warm, cos)
+    return lr

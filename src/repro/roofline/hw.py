@@ -1,0 +1,8 @@
+"""TPU v5e hardware constants (the TARGET; the container runs CPU)."""
+
+PEAK_FLOPS_BF16 = 197e12        # per chip, bf16
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_LINK_BW = 50e9              # bytes/s per link (~)
+HBM_BYTES = 16 * 2 ** 30        # 16 GiB per chip
+VMEM_BYTES = 128 * 2 ** 20      # ~128 MiB vector memory
+MXU_DIM = 128                   # systolic array tile edge

@@ -1,0 +1,67 @@
+"""Checkpoint roundtrips, including bf16 leaves and federated state."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.checkpoint import (restore_server, restore_tree,
+                                         save_server, save_tree)
+from repro.configs.base import FedConfig, LayerSpec, ModelConfig
+from repro.core.adapters import LMAdapter
+from repro.core.federated import FederatedTrainer
+from repro.data.federated import iid_split
+from repro.data.synthetic import synthetic_lm
+
+
+def test_tree_roundtrip_with_bf16(tmp_path):
+    tree = {"a": jnp.arange(12.0).reshape(3, 4),
+            "b": {"c": jnp.ones((5,), jnp.bfloat16) * 1.5,
+                  "d": jnp.arange(7, dtype=jnp.int32)},
+            "list": [jnp.zeros((2, 2)), jnp.ones((1,))]}
+    path = str(tmp_path / "ckpt.npz")
+    save_tree(path, tree, {"round": 7})
+    restored, meta = restore_tree(path, tree)
+    assert meta["round"] == 7
+    for a, b in zip(jax.tree.leaves(restored), jax.tree.leaves(tree)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_shape_mismatch_rejected(tmp_path):
+    tree = {"a": jnp.ones((3,))}
+    path = str(tmp_path / "c.npz")
+    save_tree(path, tree)
+    try:
+        restore_tree(path, {"a": jnp.ones((4,))})
+        raise AssertionError("should have raised")
+    except ValueError:
+        pass
+
+
+def test_federated_resume(tmp_path):
+    cfg = ModelConfig(n_layers=2, d_model=32, n_heads=2, n_kv_heads=2,
+                      d_ff=64, vocab_size=64, pattern=(LayerSpec("attn"),),
+                      exit_layer=1, compute_dtype="float32")
+    fed = FedConfig(n_devices=4, n_simple=2, participation=0.5, rounds=3,
+                    local_epochs=1, batch_size=4, algorithm="fedhen")
+    data = synthetic_lm(32, 16, 64, seed=1)
+    shards = [{"tokens": jnp.asarray(s["tokens"])}
+              for s in iid_split(data, 4, seed=2)]
+    tr = FederatedTrainer(LMAdapter(cfg), fed, shards)
+    tr.run_round()
+    tr.run_round()
+    path = str(tmp_path / "server.npz")
+    save_server(path, tr.server)
+
+    tr2 = FederatedTrainer(LMAdapter(cfg), fed, shards)
+    tr2.server = restore_server(path, tr2.server)
+    assert tr2.server.round == 2
+    for a, b in zip(jax.tree.leaves(tr2.server.complex),
+                    jax.tree.leaves(tr.server.complex)):
+        np.testing.assert_array_equal(a, b)
+    # resumed trainer keeps training
+    m = tr2.run_round()
+    assert np.isfinite(m["loss_complex"])

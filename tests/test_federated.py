@@ -1,0 +1,188 @@
+"""FedHeN core: masking, aggregation (Alg. 1), algorithms end-to-end."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import FedConfig, LayerSpec, ModelConfig
+from repro.core import aggregate, masking
+from repro.core.adapters import LMAdapter
+from repro.core.federated import FederatedTrainer, rounds_to_target
+from repro.data.synthetic import synthetic_lm
+from repro.data.federated import dirichlet_split, iid_split
+
+
+TINY = ModelConfig(n_layers=4, d_model=32, n_heads=2, n_kv_heads=2,
+                   d_ff=64, vocab_size=64, pattern=(LayerSpec("attn"),),
+                   exit_layer=2, compute_dtype="float32")
+
+
+# ---------------------------------------------------------------------------
+# Masking
+# ---------------------------------------------------------------------------
+
+def test_mask_size_matches_analytic():
+    adapter = LMAdapter(TINY)
+    params = adapter.init(jax.random.PRNGKey(0))
+    mask = adapter.subnet_mask(params)
+    got = masking.mask_size(mask, params)
+    assert got == TINY.simple_param_count(), (got, TINY.simple_param_count())
+
+
+def test_extract_embed_roundtrip():
+    params = LMAdapter(TINY).init(jax.random.PRNGKey(0))
+    simple = masking.extract_simple(params, TINY)
+    rebuilt = masking.embed_simple(simple, params, TINY)
+    for a, b in zip(jax.tree.leaves(rebuilt), jax.tree.leaves(params)):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_extracted_simple_runs_forward_simple():
+    from repro.models import transformer as tfm
+    params = LMAdapter(TINY).init(jax.random.PRNGKey(0))
+    simple = masking.extract_simple(params, TINY)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, 64)
+    h_full = tfm.forward_simple(params, TINY, tokens)
+    h_sub = tfm.forward_simple(simple, TINY, tokens)
+    np.testing.assert_allclose(h_full, h_sub, rtol=1e-6)
+
+
+def test_simple_loss_grad_zero_outside_mask():
+    """f([w_c]_M)'s gradient must vanish on M' (the paper's simple-client
+    update touches only shared weights)."""
+    adapter = LMAdapter(TINY)
+    params = adapter.init(jax.random.PRNGKey(0))
+    mask = adapter.subnet_mask(params)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 9), 0, 64)
+    grads = jax.grad(adapter.loss_simple)(params, {"tokens": tokens})
+    for g, m in zip(jax.tree.leaves(grads), jax.tree.leaves(mask)):
+        outside = jnp.where(jnp.broadcast_to(m, g.shape), 0.0,
+                            g.astype(jnp.float32))
+        assert float(jnp.max(jnp.abs(outside))) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Server aggregation (Alg. 1 ln. 16-22)
+# ---------------------------------------------------------------------------
+
+def _toy_cohort():
+    # tree: {"a": scalar-ish leaf in M, "b": leaf outside M}
+    cohort = {"a": jnp.array([[1.0], [2.0], [3.0], [4.0]]),
+              "b": jnp.array([[10.0], [20.0], [30.0], [40.0]])}
+    mask = {"a": jnp.asarray(True), "b": jnp.asarray(False)}
+    is_simple = jnp.array([True, True, False, False])
+    valid = jnp.array([True, True, True, True])
+    return cohort, mask, is_simple, valid
+
+
+def test_fedhen_server_update_lines_18_22():
+    cohort, mask, is_simple, valid = _toy_cohort()
+    new = aggregate.fedhen_server_update(cohort, is_simple, valid, mask)
+    # ln.18: M slice averaged over ALL devices
+    np.testing.assert_allclose(new["a"], [2.5])
+    # ln.22: M' averaged over complex devices only
+    np.testing.assert_allclose(new["b"], [35.0])
+
+
+def test_decouple_server_update():
+    cohort, mask, is_simple, valid = _toy_cohort()
+    simple_host, complex_new = aggregate.decouple_server_update(
+        cohort, is_simple, valid, mask)
+    np.testing.assert_allclose(simple_host["a"], [1.5])   # simple-only mean
+    np.testing.assert_allclose(complex_new["a"], [3.5])   # complex-only mean
+    np.testing.assert_allclose(complex_new["b"], [35.0])
+
+
+def test_nan_device_excluded():
+    cohort, mask, is_simple, valid = _toy_cohort()
+    cohort["a"] = cohort["a"].at[0, 0].set(jnp.nan)
+    valid = jax.vmap(masking.tree_isfinite)(cohort)
+    assert list(np.asarray(valid)) == [False, True, True, True]
+    new = aggregate.fedhen_server_update(cohort, is_simple, valid, mask)
+    np.testing.assert_allclose(new["a"], [3.0])  # mean of 2,3,4
+    assert np.isfinite(new["a"]).all()
+
+
+# ---------------------------------------------------------------------------
+# End-to-end rounds (tiny LM, all three algorithms)
+# ---------------------------------------------------------------------------
+
+def _make_trainer(algorithm, rounds_data_seed=0):
+    fed = FedConfig(n_devices=4, n_simple=2, participation=0.5, rounds=3,
+                    local_epochs=1, lr=0.1, clip_norm=10.0, batch_size=4,
+                    algorithm=algorithm, seed=rounds_data_seed)
+    data = synthetic_lm(32, 16, TINY.vocab_size, seed=1)
+    shards = iid_split(data, fed.n_devices, seed=2)
+    adapter = LMAdapter(TINY)
+    return FederatedTrainer(adapter, fed, shards)
+
+
+@pytest.mark.parametrize("algorithm", ["fedhen", "noside", "decouple"])
+def test_algorithms_run_and_update(algorithm):
+    tr = _make_trainer(algorithm)
+    before = jax.tree.map(jnp.copy, tr.server.complex)
+    m = tr.run_round()
+    assert np.isfinite(m["loss_complex"]) and np.isfinite(m["loss_simple"])
+    assert m["n_valid"] == tr.k_simple + tr.k_complex
+    changed = any(
+        float(jnp.max(jnp.abs(a.astype(jnp.float32) -
+                              b.astype(jnp.float32)))) > 0
+        for a, b in zip(jax.tree.leaves(before),
+                        jax.tree.leaves(tr.server.complex)))
+    assert changed
+    test = {"tokens": jnp.asarray(synthetic_lm(8, 16, TINY.vocab_size,
+                                               seed=9)["tokens"])}
+    ev = tr.evaluate(test)
+    assert 0.0 <= ev["acc_complex"] <= 1.0
+    assert ev["mbytes"] > 0
+
+
+def test_fedhen_loss_decreases():
+    tr = _make_trainer("fedhen")
+    losses = [tr.run_round()["loss_complex"] for _ in range(6)]
+    assert losses[-1] < losses[0], losses
+
+
+def test_fedhen_simple_host_is_m_slice():
+    """Alg. 1 ln. 20 invariant: server simple model == complex M slice, so
+    extract(complex) round-trips through a training round."""
+    tr = _make_trainer("fedhen")
+    tr.run_round()
+    simple = masking.extract_simple(tr.server.complex, TINY)
+    rebuilt = masking.embed_simple(simple, tr.server.complex, TINY)
+    for a, b in zip(jax.tree.leaves(rebuilt),
+                    jax.tree.leaves(tr.server.complex)):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_comm_accounting():
+    tr = _make_trainer("fedhen")
+    per = tr.bytes_per_round
+    simple_bytes = TINY.simple_param_count() * 4
+    total_bytes = TINY.param_count() * 4
+    expected = 2.0 * (tr.k_simple * simple_bytes + tr.k_complex * total_bytes)
+    assert per == expected, (per, expected)
+
+
+def test_rounds_to_target():
+    hist = [{"round": 1, "acc_simple": 0.1}, {"round": 2, "acc_simple": 0.5},
+            {"round": 3, "acc_simple": 0.7}]
+    assert rounds_to_target(hist, "acc_simple", 0.5) == 2
+    assert rounds_to_target(hist, "acc_simple", 0.9) == -1
+
+
+# ---------------------------------------------------------------------------
+# Splits
+# ---------------------------------------------------------------------------
+
+def test_dirichlet_split_is_skewed_but_complete():
+    data = synthetic_lm(400, 8, 32, seed=3)
+    shards_iid = iid_split(data, 10, seed=4)
+    shards_nid = dirichlet_split(data, 10, alpha=0.3, seed=4)
+    assert all(len(s["tokens"]) == 40 for s in shards_nid)
+    from repro.data.federated import label_distribution
+    d_iid = label_distribution(shards_iid, 10)
+    d_nid = label_distribution(shards_nid, 10)
+    # non-IID shards should be measurably more concentrated
+    assert d_nid.max(1).mean() > d_iid.max(1).mean() + 0.1

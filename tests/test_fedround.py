@@ -1,0 +1,48 @@
+"""The production round-step (fedround_dryrun's payload) is semantically a
+FedHeN round: branchless objective select + masked aggregation."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import LayerSpec, ModelConfig
+from repro.core import masking
+
+
+def test_round_step_tiny():
+    # import the factory without triggering the module-level XLA_FLAGS
+    import importlib.util
+    import os
+    spec = importlib.util.find_spec("repro.launch.fedround_dryrun")
+    # the XLA flag assignment at module top is harmless after jax init
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+
+    cfg = ModelConfig(n_layers=2, d_model=32, n_heads=2, n_kv_heads=2,
+                      d_ff=64, vocab_size=64, pattern=(LayerSpec("attn"),),
+                      exit_layer=1, compute_dtype="float32")
+    from repro.models import transformer as tfm
+    from repro.models.common import NO_POLICY
+
+    k_clients, batch, steps, seq = 4, 2, 2, 16
+    step = mod.make_round_step(cfg, NO_POLICY, local_steps=steps)
+    params = tfm.init_params(jax.random.PRNGKey(0), cfg)
+    cohort = jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (k_clients,) + x.shape), params)
+    data = jax.random.randint(jax.random.PRNGKey(1),
+                              (k_clients, batch, steps, seq + 1), 0, 64)
+    is_simple = jnp.array([True, True, False, False])
+
+    new_complex, loss = jax.jit(step)(cohort, data, is_simple)
+    assert np.isfinite(float(loss))
+    for x in jax.tree.leaves(new_complex):
+        assert np.isfinite(np.asarray(x, np.float32)).all()
+    # simple clients must not have moved the M' (complex-only) slice:
+    # aggregation takes M' from complex clients only, so M' != init
+    # while the M slice mixes all four — both should differ from init
+    changed = any(
+        float(jnp.max(jnp.abs(a.astype(jnp.float32) -
+                              b.astype(jnp.float32)))) > 0
+        for a, b in zip(jax.tree.leaves(new_complex),
+                        jax.tree.leaves(params)))
+    assert changed

@@ -1,0 +1,151 @@
+"""Pallas kernel validation: interpret=True vs pure-jnp oracles, swept over
+shapes and dtypes (deliverable c)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.masked_agg.kernel import masked_agg_pallas
+from repro.kernels.masked_agg.ops import masked_agg_leaf, masked_agg_tree
+from repro.kernels.masked_agg.ref import masked_agg_ref
+from repro.kernels.rglru_scan.kernel import lru_scan_pallas
+from repro.kernels.rglru_scan.ref import lru_scan_ref
+
+
+# ---------------------------------------------------------------------------
+# masked_agg
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("z,n", [(4, 256), (10, 2048), (7, 5000), (32, 999)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_masked_agg_sweep(z, n, dtype):
+    key = jax.random.PRNGKey(z * 1000 + n)
+    ks = jax.random.split(key, 4)
+    x = jax.random.normal(ks[0], (z, n), dtype)
+    mask = jax.random.bernoulli(ks[1], 0.5, (n,))
+    w_m = jax.nn.softmax(jax.random.normal(ks[2], (z,)))
+    w_rest = jax.nn.softmax(jax.random.normal(ks[3], (z,)))
+    got = masked_agg_pallas(x, mask, w_m, w_rest, block_n=1024,
+                            interpret=True)
+    want = masked_agg_ref(x, mask, w_m, w_rest)
+    tol = 1e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_masked_agg_nan_gating():
+    x = jnp.array([[jnp.nan, 1.0], [2.0, 3.0]])
+    mask = jnp.array([True, False])
+    got = masked_agg_pallas(x, mask, jnp.array([0.0, 1.0]),
+                            jnp.array([0.0, 1.0]), interpret=True)
+    np.testing.assert_allclose(got, [2.0, 3.0])
+
+
+def test_masked_agg_tree_matches_server_update():
+    """The kernel path must reproduce core.aggregate.fedhen_server_update."""
+    from repro.core import aggregate
+    key = jax.random.PRNGKey(0)
+    cohort = {"a": jax.random.normal(key, (6, 33)),
+              "b": jax.random.normal(jax.random.fold_in(key, 1), (6, 17))}
+    mask = {"a": jnp.asarray(True), "b": jnp.asarray(False)}
+    is_simple = jnp.array([1, 1, 1, 0, 0, 0], bool)
+    valid = jnp.ones(6, bool)
+    want = aggregate.fedhen_server_update(cohort, is_simple, valid, mask)
+    w_m = valid / 6.0
+    w_rest = (~is_simple) * valid / 3.0
+    got = masked_agg_tree(cohort, mask, w_m, w_rest,
+                          force_pallas_interpret=True)
+    for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        np.testing.assert_allclose(g, w, rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("s,h,kh,dh,window", [
+    (128, 4, 4, 64, 0),
+    (128, 4, 2, 64, 0),
+    (256, 8, 2, 32, 64),
+    (128, 4, 1, 128, 32),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(s, h, kh, dh, window, dtype):
+    key = jax.random.PRNGKey(s + h)
+    ks = jax.random.split(key, 3)
+    b = 2
+    q = jax.random.normal(ks[0], (b, s, h, dh), dtype)
+    k = jax.random.normal(ks[1], (b, s, kh, dh), dtype)
+    v = jax.random.normal(ks[2], (b, s, kh, dh), dtype)
+    got = flash_attention_pallas(q, k, v, window=window, block_q=64,
+                                 block_k=64, interpret=True)
+    want = flash_attention_ref(q, k, v, window=window)
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_attention_softcap():
+    key = jax.random.PRNGKey(7)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (1, 128, 2, 64)) * 4
+    k = jax.random.normal(ks[1], (1, 128, 2, 64)) * 4
+    v = jax.random.normal(ks[2], (1, 128, 2, 64))
+    got = flash_attention_pallas(q, k, v, softcap=30.0, block_q=64,
+                                 block_k=64, interpret=True)
+    want = flash_attention_ref(q, k, v, softcap=30.0)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_flash_matches_model_attention():
+    """Kernel semantics == the model's XLA chunked path (same contract)."""
+    from repro.models.attention import chunked_causal_attention
+    key = jax.random.PRNGKey(9)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (2, 128, 4, 32))
+    k = jax.random.normal(ks[1], (2, 128, 2, 32))
+    v = jax.random.normal(ks[2], (2, 128, 2, 32))
+    got = flash_attention_pallas(q, k, v, window=48, block_q=32,
+                                 block_k=32, interpret=True)
+    want = chunked_causal_attention(q, k, v, window=48, q_chunk=32)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# rglru scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,s,d,block_s,block_d", [
+    (2, 64, 256, 16, 128),
+    (1, 128, 512, 32, 512),
+    (3, 32, 384, 8, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_lru_scan_sweep(b, s, d, block_s, block_d, dtype):
+    key = jax.random.PRNGKey(b * 100 + s)
+    ka, kb = jax.random.split(key)
+    a = jax.nn.sigmoid(jax.random.normal(ka, (b, s, d))).astype(dtype)
+    bb = (jax.random.normal(kb, (b, s, d)) * 0.1).astype(dtype)
+    got = lru_scan_pallas(a, bb, block_d=block_d, block_s=block_s,
+                          interpret=True)
+    want = lru_scan_ref(a.astype(jnp.float32), bb.astype(jnp.float32))
+    tol = 1e-5 if dtype == jnp.float32 else 4e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32), want,
+                               rtol=tol, atol=tol)
+
+
+def test_lru_scan_matches_model_path():
+    """Kernel == the associative-scan path used by models/rglru.py."""
+    from repro.kernels.rglru_scan.ops import lru_scan
+    key = jax.random.PRNGKey(3)
+    ka, kb = jax.random.split(key)
+    a = jax.nn.sigmoid(jax.random.normal(ka, (2, 64, 256)))
+    b = jax.random.normal(kb, (2, 64, 256)) * 0.2
+    got = lru_scan_pallas(a, b, block_d=128, block_s=16, interpret=True)
+    want = lru_scan(a, b)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)

@@ -1,0 +1,184 @@
+"""Unit tests for individual model layers."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import LayerSpec, ModelConfig, MoEConfig
+from repro.models import attention, common, resnet, rglru, xlstm
+
+
+# ---------------------------------------------------------------------------
+# mLSTM: chunked parallel form == recurrent oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("chunk", [1, 4, 8, 16])
+def test_mlstm_chunked_matches_recurrent(chunk):
+    key = jax.random.PRNGKey(0)
+    b, s, nh, dh = 2, 16, 3, 8
+    ks = jax.random.split(key, 5)
+    q = jax.random.normal(ks[0], (b, s, nh, dh))
+    k = jax.random.normal(ks[1], (b, s, nh, dh))
+    v = jax.random.normal(ks[2], (b, s, nh, dh))
+    i_raw = jax.random.normal(ks[3], (b, s, nh)) * 2.0
+    log_f = jax.nn.log_sigmoid(jax.random.normal(ks[4], (b, s, nh)) + 2.0)
+
+    h_ref, st_ref = xlstm.mlstm_recurrent(q, k, v, i_raw, log_f)
+    h_chk, st_chk = xlstm.mlstm_chunked(q, k, v, i_raw, log_f, chunk=chunk)
+    np.testing.assert_allclose(h_chk, h_ref, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(st_chk["C"], st_ref["C"], rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(st_chk["n"], st_ref["n"], rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(st_chk["m"], st_ref["m"], rtol=1e-4, atol=1e-4)
+
+
+def test_mlstm_chunked_carries_state():
+    """Two half-sequence chunked calls == one full call."""
+    key = jax.random.PRNGKey(1)
+    b, s, nh, dh = 1, 16, 2, 4
+    ks = jax.random.split(key, 5)
+    q = jax.random.normal(ks[0], (b, s, nh, dh))
+    k = jax.random.normal(ks[1], (b, s, nh, dh))
+    v = jax.random.normal(ks[2], (b, s, nh, dh))
+    i_raw = jax.random.normal(ks[3], (b, s, nh))
+    log_f = jax.nn.log_sigmoid(jax.random.normal(ks[4], (b, s, nh)) + 1.0)
+
+    h_full, _ = xlstm.mlstm_chunked(q, k, v, i_raw, log_f, chunk=4)
+    h1, st = xlstm.mlstm_chunked(q[:, :8], k[:, :8], v[:, :8],
+                                 i_raw[:, :8], log_f[:, :8], chunk=4)
+    h2, _ = xlstm.mlstm_chunked(q[:, 8:], k[:, 8:], v[:, 8:],
+                                i_raw[:, 8:], log_f[:, 8:], chunk=4, state=st)
+    np.testing.assert_allclose(jnp.concatenate([h1, h2], 1), h_full,
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Attention: chunked == naive; window semantics
+# ---------------------------------------------------------------------------
+
+def _naive_attention(q, k, v, window=0, softcap_val=0.0):
+    b, s, h, dh = q.shape
+    kh = k.shape[2]
+    g = h // kh
+    qg = q.reshape(b, s, kh, g, dh)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qg, k) / dh ** 0.5
+    logits = common.softcap(logits, softcap_val)
+    pos = jnp.arange(s)
+    mask = pos[:, None] >= pos[None, :]
+    if window:
+        mask &= (pos[:, None] - pos[None, :]) < window
+    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
+    return out.reshape(b, s, h, dh)
+
+
+@pytest.mark.parametrize("window", [0, 8, 64])
+@pytest.mark.parametrize("softcap_val", [0.0, 30.0])
+def test_chunked_attention_matches_naive(window, softcap_val):
+    key = jax.random.PRNGKey(2)
+    b, s, h, kh, dh = 2, 128, 4, 2, 16
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, s, h, dh))
+    k = jax.random.normal(ks[1], (b, s, kh, dh))
+    v = jax.random.normal(ks[2], (b, s, kh, dh))
+    ref = _naive_attention(q, k, v, window, softcap_val)
+    out = attention.chunked_causal_attention(
+        q, k, v, window=window, softcap_val=softcap_val, q_chunk=32)
+    np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU: associative scan == sequential reference
+# ---------------------------------------------------------------------------
+
+def test_lru_scan_matches_sequential():
+    cfg = ModelConfig(d_model=16, d_rnn=24, compute_dtype="float32")
+    p = rglru.init_rglru(jax.random.PRNGKey(3), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(4), (2, 32, 24))
+    y = rglru.lru_scan(p, x)
+
+    a, b = rglru._gates(p, x)
+    ys = []
+    state = jnp.zeros((2, 24))
+    for t in range(32):
+        state = a[:, t] * state + b[:, t]
+        ys.append(state)
+    ref = jnp.stack(ys, axis=1)
+    np.testing.assert_allclose(y, ref, rtol=1e-5, atol=1e-5)
+
+
+def test_lru_decode_matches_scan():
+    cfg = ModelConfig(d_model=16, d_rnn=24, compute_dtype="float32")
+    p = rglru.init_rglru(jax.random.PRNGKey(5), cfg)
+    h = jax.random.normal(jax.random.PRNGKey(6), (2, 12, 16))
+    full = rglru.apply_rglru(p, h, cfg)
+    cache = rglru.init_rglru_cache(cfg, 2)
+    outs = []
+    for t in range(12):
+        o, cache = rglru.apply_rglru_decode(p, h[:, t:t + 1], cache, cfg)
+        outs.append(o)
+    np.testing.assert_allclose(jnp.concatenate(outs, 1), full,
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# ResNet (paper model)
+# ---------------------------------------------------------------------------
+
+def test_resnet_shapes_and_param_counts():
+    params = resnet.init_params(jax.random.PRNGKey(0), n_classes=10)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 32, 32, 3))
+    exit_logits, final_logits = resnet.forward(params, x)
+    assert exit_logits.shape == (4, 10)
+    assert final_logits.shape == (4, 10)
+    assert not bool(jnp.isnan(final_logits).any())
+
+    total = resnet.param_count(params)
+    # paper: complex ~11.1M
+    assert 10.5e6 < total < 11.8e6, total
+
+    mask = resnet.subnet_mask(params)
+    simple = sum(x.size for x, m in
+                 zip(jax.tree.leaves(params), jax.tree.leaves(mask)) if m)
+    # paper: simple ~0.7M
+    assert 0.55e6 < simple < 0.85e6, simple
+
+
+def test_resnet_simple_forward_matches_exit_head():
+    params = resnet.init_params(jax.random.PRNGKey(0), n_classes=10)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, 32, 3))
+    exit_logits, _ = resnet.forward(params, x)
+    simple_logits = resnet.forward_simple(params, x)
+    np.testing.assert_allclose(simple_logits, exit_logits, rtol=1e-5,
+                               atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# RoPE / norms sanity
+# ---------------------------------------------------------------------------
+
+def test_rope_preserves_norm():
+    x = jax.random.normal(jax.random.PRNGKey(7), (1, 8, 2, 16))
+    y = common.apply_rope(x, jnp.arange(8), 10000.0)
+    np.testing.assert_allclose(jnp.linalg.norm(y, axis=-1),
+                               jnp.linalg.norm(x, axis=-1), rtol=1e-5)
+
+
+def test_rope_relative_shift_invariance():
+    """RoPE dot products depend only on relative positions."""
+    q = jax.random.normal(jax.random.PRNGKey(8), (1, 1, 1, 16))
+    k = jax.random.normal(jax.random.PRNGKey(9), (1, 1, 1, 16))
+    def dot_at(pq, pk):
+        qr = common.apply_rope(q, jnp.array([pq]), 10000.0)
+        kr = common.apply_rope(k, jnp.array([pk]), 10000.0)
+        return jnp.sum(qr * kr)
+    np.testing.assert_allclose(dot_at(5, 3), dot_at(105, 103), rtol=1e-4)
+
+
+def test_groupnorm_normalizes():
+    p = common.init_groupnorm(16, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(10), (2, 4, 4, 16)) * 5 + 3
+    y = common.apply_groupnorm(p, x, groups=4)
+    assert abs(float(jnp.mean(y))) < 1e-4
+    np.testing.assert_allclose(float(jnp.var(y)), 1.0, rtol=1e-2)

@@ -1,0 +1,54 @@
+"""Expert padding (H4): padded MoE == unpadded MoE, bit for bit in routing."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import LayerSpec, ModelConfig, MoEConfig
+from repro.models import mlp
+
+
+def _cfg(pad_to=0):
+    return ModelConfig(n_layers=2, d_model=32, n_heads=2, n_kv_heads=2,
+                       d_ff=48, vocab_size=64,
+                       pattern=(LayerSpec("attn", "moe"),),
+                       moe=MoEConfig(n_experts=6, top_k=2, n_shared=1,
+                                     d_expert=48, capacity_factor=8.0,
+                                     pad_to=pad_to),
+                       exit_layer=1, compute_dtype="float32")
+
+
+def test_padded_moe_matches_unpadded():
+    cfg0, cfg1 = _cfg(0), _cfg(8)
+    p0 = mlp.init_moe(jax.random.PRNGKey(0), cfg0)
+    p1 = mlp.init_moe(jax.random.PRNGKey(0), cfg1)
+    # graft the real experts' weights so both compute the same function
+    p1 = dict(p1)
+    p1["router"] = p0["router"]
+    p1["experts"] = jax.tree.map(
+        lambda pad, real: pad.at[:real.shape[0]].set(real),
+        p1["experts"], p0["experts"])
+    p1["shared"] = p0["shared"]
+
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 32))
+    y0, aux0 = mlp.apply_moe(p0, x, cfg0)
+    y1, aux1 = mlp.apply_moe(p1, x, cfg1)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y0),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(float(aux1["load_balance"]),
+                               float(aux0["load_balance"]), rtol=1e-6)
+
+
+def test_pad_experts_receive_no_tokens_and_no_grads():
+    cfg = _cfg(8)
+    p = mlp.init_moe(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 32))
+
+    def loss(p):
+        y, aux = mlp.apply_moe(p, x, cfg)
+        return jnp.sum(y ** 2)
+
+    g = jax.grad(loss)(p)
+    for name in ("gate", "up", "down"):
+        pad_grads = g["experts"][name][cfg.moe.n_experts:]
+        assert float(jnp.max(jnp.abs(pad_grads))) == 0.0, name

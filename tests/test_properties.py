@@ -1,0 +1,134 @@
+"""Property-based tests (hypothesis) for the system's invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import aggregate, masking
+from repro.models import common
+
+jax.config.update("jax_platform_name", "cpu")
+
+_settings = settings(max_examples=25, deadline=None,
+                     derandomize=True)
+
+
+# ---------------------------------------------------------------------------
+# Server aggregation (Alg. 1) invariants
+# ---------------------------------------------------------------------------
+
+@_settings
+@given(z=st.integers(2, 12), n=st.integers(1, 40), seed=st.integers(0, 999))
+def test_fedhen_update_is_convex_combination(z, n, seed):
+    """Every output coordinate lies in the convex hull of the valid
+    cohort's coordinates (means can't extrapolate)."""
+    rng = np.random.default_rng(seed)
+    cohort = {"w": jnp.asarray(rng.normal(size=(z, n)).astype(np.float32))}
+    mask = {"w": jnp.asarray(rng.random(n) < 0.5)}
+    is_simple = jnp.asarray(rng.random(z) < 0.5)
+    valid = jnp.asarray(np.ones(z, bool))
+    if not bool(jnp.any(~is_simple)):
+        is_simple = is_simple.at[0].set(False)
+    out = aggregate.fedhen_server_update(cohort, is_simple, valid, mask)
+    lo = jnp.min(cohort["w"], axis=0) - 1e-5
+    hi = jnp.max(cohort["w"], axis=0) + 1e-5
+    assert bool(jnp.all((out["w"] >= lo) & (out["w"] <= hi)))
+
+
+@_settings
+@given(z=st.integers(2, 10), seed=st.integers(0, 999))
+def test_consensus_is_fixed_point(z, seed):
+    """If every client returns the same model, the server keeps it
+    (for every algorithm)."""
+    rng = np.random.default_rng(seed)
+    w = rng.normal(size=(7,)).astype(np.float32)
+    cohort = {"w": jnp.asarray(np.tile(w, (z, 1)))}
+    mask = {"w": jnp.asarray(np.array([1, 1, 1, 0, 0, 0, 0], bool))}
+    is_simple = jnp.asarray(rng.random(z) < 0.5)
+    if not bool(jnp.any(~is_simple)):
+        is_simple = is_simple.at[0].set(False)
+    valid = jnp.ones(z, bool)
+    out = aggregate.fedhen_server_update(cohort, is_simple, valid, mask)
+    np.testing.assert_allclose(out["w"], w, rtol=1e-6)
+
+
+@_settings
+@given(z=st.integers(3, 10), bad=st.integers(0, 2), seed=st.integers(0, 99))
+def test_invalid_devices_never_contribute(z, bad, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(z, 5)).astype(np.float32)
+    x[:bad] = np.inf
+    cohort = {"w": jnp.asarray(x)}
+    mask = {"w": jnp.asarray(np.ones(5, bool))}
+    is_simple = jnp.zeros(z, bool)
+    valid = jax.vmap(masking.tree_isfinite)(cohort)
+    out = aggregate.fedhen_server_update(cohort, is_simple, valid, mask)
+    assert np.isfinite(np.asarray(out["w"])).all()
+    np.testing.assert_allclose(out["w"], x[bad:].mean(0), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Cross-entropy invariants
+# ---------------------------------------------------------------------------
+
+@_settings
+@given(b=st.integers(1, 4), s=st.integers(1, 8), v=st.integers(2, 33),
+       seed=st.integers(0, 999))
+def test_ce_matches_naive(b, s, v, seed):
+    rng = np.random.default_rng(seed)
+    logits = jnp.asarray(rng.normal(size=(b, s, v)).astype(np.float32) * 3)
+    labels = jnp.asarray(rng.integers(0, v, size=(b, s)))
+    got = common.softmax_cross_entropy(logits, labels)
+    lp = jax.nn.log_softmax(logits, axis=-1)
+    want = -jnp.mean(jnp.take_along_axis(lp, labels[..., None], -1))
+    # fp32: one-hot-contraction vs take_along_axis differ by a few ulp
+    np.testing.assert_allclose(float(got), float(want), rtol=5e-5,
+                               atol=1e-6)
+
+
+@_settings
+@given(shift=st.floats(-50, 50), seed=st.integers(0, 99))
+def test_ce_shift_invariance(shift, seed):
+    rng = np.random.default_rng(seed)
+    logits = jnp.asarray(rng.normal(size=(2, 3, 17)).astype(np.float32))
+    labels = jnp.asarray(rng.integers(0, 17, size=(2, 3)))
+    a = common.softmax_cross_entropy(logits, labels)
+    b = common.softmax_cross_entropy(logits + shift, labels)
+    np.testing.assert_allclose(float(a), float(b), rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Sharding policy invariants
+# ---------------------------------------------------------------------------
+
+@_settings
+@given(dims=st.lists(st.sampled_from([1, 3, 8, 16, 64, 256]),
+                     min_size=2, max_size=4),
+       mode=st.sampled_from(["auto", "replicate", "seq2d", "dp2d",
+                             "head_dim"]))
+def test_policy_specs_always_valid(dims, mode):
+    """Resolved specs never reuse a mesh axis and always divide the dim."""
+    import os
+    if jax.device_count() < 4:
+        # policy math is device-independent; build a fake mesh via
+        # make_mesh on available devices if possible
+        return
+    from repro.configs.base import ModelConfig
+    from repro.launch.sharding import MeshPolicy, _axis_size
+    mesh = jax.make_mesh(
+        (2, 2), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    cfg = ModelConfig(attn_shard=mode, n_heads=4, n_kv_heads=4)
+    pol = MeshPolicy(mesh, cfg)
+    names = ["batch", "seq", "heads", "ffn"][:len(dims)]
+    spec = pol.spec(tuple(dims), tuple(names))
+    used = []
+    for dim, ax in zip(dims, tuple(spec)):
+        if ax is None:
+            continue
+        axes = (ax,) if isinstance(ax, str) else tuple(ax)
+        assert dim % _axis_size(mesh, axes) == 0
+        for a in axes:
+            assert a not in used
+            used.append(a)

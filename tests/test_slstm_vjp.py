@@ -1,0 +1,66 @@
+"""The custom sLSTM block VJP must match plain autodiff exactly."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import xlstm
+from repro.models.xlstm import _slstm_step_pure, slstm_block
+
+
+def _ref_block(xg_b, r, state):
+    """Autodiff-able reference: identical math, no custom_vjp."""
+    def step(st, xg_t):
+        rec = jnp.einsum("bhj,ghij->gbhi", st["h"], r)
+        new = _slstm_step_pure(xg_t, rec, st)
+        return new, new["h"]
+    stT, hs = jax.lax.scan(step, state, xg_b.transpose(1, 0, 2, 3, 4))
+    return hs.transpose(1, 0, 2, 3), stT
+
+
+def test_slstm_block_forward_and_grads():
+    key = jax.random.PRNGKey(0)
+    b, t, nh, dh = 2, 8, 3, 4
+    ks = jax.random.split(key, 3)
+    xg = jax.random.normal(ks[0], (b, t, 4, nh, dh))
+    r = jax.random.normal(ks[1], (4, nh, dh, dh)) * 0.3
+    state = {"c": jnp.zeros((b, nh, dh)), "n": jnp.zeros((b, nh, dh)) + 1e-6,
+             "h": jax.random.normal(ks[2], (b, nh, dh)) * 0.1,
+             "m": jnp.zeros((b, nh, dh))}
+
+    hs1, st1 = slstm_block(xg, r, state)
+    hs2, st2 = _ref_block(xg, r, state)
+    np.testing.assert_allclose(hs1, hs2, rtol=1e-6, atol=1e-6)
+    for k in st1:
+        np.testing.assert_allclose(st1[k], st2[k], rtol=1e-6, atol=1e-6)
+
+    def loss(fn):
+        def f(xg, r, state):
+            hs, st = fn(xg, r, state)
+            return jnp.sum(hs ** 2) + jnp.sum(st["c"] ** 2) \
+                + jnp.sum(st["h"] * 0.3) + jnp.sum(st["n"]) \
+                + 0.1 * jnp.sum(st["m"])
+        return jax.grad(f, argnums=(0, 1, 2))(xg, r, state)
+
+    g1 = loss(slstm_block)
+    g2 = loss(_ref_block)
+    for a, b_ in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
+        np.testing.assert_allclose(a, b_, rtol=2e-5, atol=2e-5)
+
+
+def test_slstm_layer_end_to_end_grads():
+    """Through the full sLSTM layer (blocks chained by the outer scan)."""
+    from repro.configs.base import ModelConfig
+    cfg = ModelConfig(d_model=24, n_heads=2, n_kv_heads=2,
+                      compute_dtype="float32")
+    p = xlstm.init_slstm(jax.random.PRNGKey(1), cfg)
+    h = jax.random.normal(jax.random.PRNGKey(2), (2, 12, 24))
+
+    def f(p, h):
+        return jnp.sum(xlstm.apply_slstm(p, h, cfg) ** 2)
+
+    g = jax.grad(f)(p, h)
+    for leaf in jax.tree.leaves(g):
+        assert np.isfinite(np.asarray(leaf)).all()
+    # r must receive gradient through the custom path
+    assert float(jnp.max(jnp.abs(g["r"]))) > 0
