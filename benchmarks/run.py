@@ -7,6 +7,8 @@ benches.  Prints ``name,us_per_call,derived`` CSV rows.
   sidecost— 'side objective adds minimal cost' (paper §2): step-time +
             FLOPs ratio of ClientTrainingSideObj vs ClientTraining
   aggsrv  — server masked-aggregation throughput (kernel contract, XLA path)
+  streamscale — streaming cohort engine: cohort x chunk sweep of round
+            latency + compiled peak temp memory (O(chunk) memory claim)
   serve   — early-exit serving throughput (reduced arch, CPU)
   roofline— aggregates results/dryrun/*.json (see EXPERIMENTS.md §Roofline)
 
@@ -123,6 +125,18 @@ def bench_aggsrv():
     _row("server_masked_agg", us, f"GBps={gbps:.2f};leaf=10x4M")
 
 
+def bench_streamscale():
+    """Cohort x chunk sweep: the streaming engine's memory/latency story."""
+    from benchmarks.streaming_cohort import sweep
+    rounds = 1 if os.environ.get("BENCH_FAST") else 3
+    for r in sweep(timed_rounds=rounds):
+        derived = (f"k={r['k']};chunk={r['chunk']};"
+                   f"temp_mib={r['temp_bytes'] / 2**20:.2f}")
+        if "fits_under_seed_peak" in r:
+            derived += f";fits_under_seed_peak={r['fits_under_seed_peak']}"
+        _row(f"streamscale_{r['label']}", r["us_per_round"], derived)
+
+
 def bench_serve():
     from repro import configs
     from repro.launch.serve import generate
@@ -165,6 +179,7 @@ BENCHES = {
     "comm": bench_comm,
     "sidecost": bench_sidecost,
     "aggsrv": bench_aggsrv,
+    "streamscale": bench_streamscale,
     "serve": bench_serve,
     "roofline": bench_roofline,
 }

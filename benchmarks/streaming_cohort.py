@@ -1,0 +1,80 @@
+"""Streaming cohort engine: cohort size x chunk size sweep.
+
+Measures, for each (cohort k, cohort_chunk) point, the compiled round's
+peak temp memory (``memory_analysis().temp_size_in_bytes`` of the AOT
+round — XLA's scheduled scratch high-water mark, the quantity the
+streaming engine bounds) and the wall-clock round latency.
+
+The headline row: a cohort 4x the seed default (k=40 vs k=10) streamed
+with ``cohort_chunk=5`` must fit under the one-shot k=10 round's peak temp
+memory — that is the scale the engine buys (ISSUE 2 acceptance).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FedConfig, LayerSpec, ModelConfig
+from repro.core.adapters import LMAdapter
+from repro.core.federated import FederatedTrainer
+from repro.data.federated import iid_split
+from repro.data.synthetic import synthetic_lm
+
+STREAM_CFG = ModelConfig(n_layers=4, d_model=64, n_heads=4, n_kv_heads=2,
+                         d_ff=128, vocab_size=256,
+                         pattern=(LayerSpec("attn"),), exit_layer=2,
+                         compute_dtype="float32")
+
+# (label, total clients, cohort_chunk); participation 0.5 -> k = clients/2.
+# k=10 matches the seed FedConfig default cohort (100 devices x 10%).
+SWEEP: Tuple[Tuple[str, int, int], ...] = (
+    ("k10_chunk0", 20, 0),    # seed-default cohort, one-shot
+    ("k10_chunk5", 20, 5),
+    ("k40_chunk0", 80, 0),    # 4x cohort, one-shot: the memory blow-up
+    ("k40_chunk10", 80, 10),
+    ("k40_chunk5", 80, 5),    # 4x cohort streamed: the acceptance row
+)
+
+
+def build_trainer(n_devices: int, chunk: int, *,
+                  timed_rounds: int) -> FederatedTrainer:
+    fed = FedConfig(n_devices=n_devices, n_simple=n_devices // 2,
+                    participation=0.5, rounds=timed_rounds, local_epochs=1,
+                    lr=0.1, batch_size=8, algorithm="fedhen", seed=0,
+                    cohort_chunk=chunk)
+    data = synthetic_lm(n_devices * 16, 32, STREAM_CFG.vocab_size, seed=1)
+    shards = iid_split(data, fed.n_devices, seed=2)
+    shards = [{"tokens": jnp.asarray(s["tokens"])} for s in shards]
+    return FederatedTrainer(LMAdapter(STREAM_CFG), fed, shards)
+
+
+def measure(n_devices: int, chunk: int, *, timed_rounds: int = 3) -> Dict:
+    trainer = build_trainer(n_devices, chunk, timed_rounds=timed_rounds)
+    compiled = trainer.lower_round().compile()
+    mem = compiled.memory_analysis()
+    trainer.run_round()                      # compile + warm the jit cache
+    t0 = time.time()
+    for _ in range(timed_rounds):
+        trainer.run_round()
+    us = (time.time() - t0) / timed_rounds * 1e6
+    return {"k": trainer.k_simple + trainer.k_complex, "chunk": chunk,
+            "us_per_round": us,
+            "temp_bytes": int(mem.temp_size_in_bytes),
+            "arg_bytes": int(mem.argument_size_in_bytes)}
+
+
+def sweep(timed_rounds: int = 3) -> List[Dict]:
+    rows = []
+    for label, n_devices, chunk in SWEEP:
+        r = measure(n_devices, chunk, timed_rounds=timed_rounds)
+        r["label"] = label
+        rows.append(r)
+    by = {r["label"]: r for r in rows}
+    # the acceptance comparison: 4x cohort streamed vs seed one-shot peak
+    by["k40_chunk5"]["fits_under_seed_peak"] = (
+        by["k40_chunk5"]["temp_bytes"] <= by["k10_chunk0"]["temp_bytes"])
+    return rows

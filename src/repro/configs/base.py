@@ -312,3 +312,10 @@ class FedConfig:
     # client objectives (Li et al. 2020, the paper's related-work family);
     # composes with any of the three algorithms.  0 = off (paper setting).
     prox_mu: float = 0.0
+    # Streaming cohort engine: train the round's cohort in chunks of this
+    # many clients (per population), folding each chunk into running masked
+    # aggregation sums — device memory becomes O(cohort_chunk) instead of
+    # O(k).  0 = whole population in one chunk.  Populations whose size the
+    # chunk does not divide are padded with zero-validity clients, so the
+    # aggregate is unchanged (see core/federated.py).
+    cohort_chunk: int = 0

@@ -5,34 +5,56 @@ treedef with a leading cohort axis ``Z``.  Simple clients' complex-only
 slices are carried untouched (they are weighted out by the masks), so one
 stacked representation serves every algorithm.
 
-The hot path — a weighted masked mean over the cohort axis — is exactly the
-``masked_agg`` Pallas kernel's contract; the XLA path here is its reference
-semantics (and what the dry-run lowers, since Pallas cannot lower on the CPU
+Two entry points:
+
+* One-shot (``fedhen_server_update`` / ``decouple_server_update``): the
+  whole cohort is stacked and reduced at once.  Reference semantics.
+* Streaming (``streaming_init`` / ``streaming_fold`` / ``streaming_finalize``):
+  the cohort arrives in chunks; each chunk is folded into running
+  *unnormalized* masked sums (one accumulator tree selecting inside-M /
+  outside-M weights per element, plus the two weight totals), and the
+  division happens once at ``streaming_finalize``.  This is the contract the
+  round engine's ``lax.scan`` over cohort chunks uses (core/federated.py):
+  server memory is O(chunk), the result matches the one-shot path up to
+  float summation order.
+
+The hot path — a weighted masked sum over the cohort axis — is exactly the
+``masked_agg`` Pallas kernel's contract; ``streaming_fold`` dispatches to it
+on TPU via ``kernels/masked_agg/ops.py``, with the XLA reference as the CPU
+fallback (what the dry-run lowers, since Pallas cannot lower on the CPU
 backend).
 """
 
 from __future__ import annotations
 
-from typing import Any, Optional
+from typing import Any, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import masking
+from repro.kernels.masked_agg import ops as agg_ops
 
 Tree = Any
+
+ALGORITHMS = ("fedhen", "noside", "decouple")
+
+
+def _gated_wsum_leaf(x: jax.Array, weights: jax.Array) -> jax.Array:
+    """f32 weighted sum of one stacked leaf over the cohort axis.
+
+    Gates before multiplying: a NaN device with weight 0 must not poison
+    the sum (paper's NaN-device exclusion)."""
+    w = weights.reshape((-1,) + (1,) * (x.ndim - 1)).astype(jnp.float32)
+    xf = jnp.where(w > 0, x.astype(jnp.float32), 0.0)
+    return jnp.sum(xf * w, axis=0)
 
 
 def _wmean(stacked: Tree, weights: jax.Array) -> Tree:
     """Weighted mean over leading cohort axis.  weights: (Z,) already
     normalized (sums to 1 over the intended group)."""
-    def leaf(x):
-        w = weights.reshape((-1,) + (1,) * (x.ndim - 1)).astype(jnp.float32)
-        # gate before multiplying: a NaN device with weight 0 must not
-        # poison the sum (paper's NaN-device exclusion)
-        xf = jnp.where(w > 0, x.astype(jnp.float32), 0.0)
-        return jnp.sum(xf * w, axis=0).astype(x.dtype)
-    return jax.tree.map(leaf, stacked)
+    return jax.tree.map(
+        lambda x: _gated_wsum_leaf(x, weights).astype(x.dtype), stacked)
 
 
 def _norm_weights(raw: jax.Array) -> jax.Array:
@@ -86,3 +108,98 @@ def masked_cohort_mean(cohort: Tree, weights_m: jax.Array,
     mean_m = _wmean(cohort, weights_m)
     mean_rest = _wmean(cohort, weights_rest)
     return masking.where_mask(mask, mean_m, mean_rest)
+
+
+# ---------------------------------------------------------------------------
+# Streaming aggregation (chunked cohorts)
+# ---------------------------------------------------------------------------
+
+class StreamState(NamedTuple):
+    """Running sums of a chunked server aggregation (a jit/scan carry).
+
+    ``acc`` is one f32 tree of *unnormalized* masked sums: inside M each
+    element accumulates ``sum_z w_in[z] * x[z]``, outside M
+    ``sum_z w_out[z] * x[z]`` — exactly one ``masked_agg`` kernel pass per
+    chunk.  ``acc_out`` (decouple only, else ``None``) additionally carries
+    the *full-tree* ``w_out`` sums, because decouple's new complex model is
+    the complex-group mean everywhere, including inside M.  ``tot_in`` /
+    ``tot_out`` are the scalar weight totals the finalize divides by.
+    """
+    acc: Tree
+    acc_out: Optional[Tree]
+    tot_in: jax.Array
+    tot_out: jax.Array
+
+
+def _chunk_weights(is_simple: jax.Array, valid: jax.Array,
+                   algorithm: str) -> Tuple[jax.Array, jax.Array]:
+    """Raw (unnormalized) per-client weights of one chunk.
+
+    ``w_in`` weights the inside-M accumulator: every valid device for
+    fedhen/noside (Alg. 1 ln. 18), simple devices only for decouple.
+    ``w_out`` weights outside M: complex devices only (ln. 22), for all
+    three algorithms.
+    """
+    if algorithm not in ALGORITHMS:
+        raise ValueError(algorithm)
+    valid_f = valid.astype(jnp.float32)
+    w_in = valid_f * is_simple if algorithm == "decouple" else valid_f
+    w_out = valid_f * (~is_simple)
+    return w_in, w_out
+
+
+def streaming_init(params_like: Tree, algorithm: str) -> StreamState:
+    """Zero accumulators shaped like one (unstacked) complex model."""
+    if algorithm not in ALGORITHMS:
+        raise ValueError(algorithm)
+    zeros = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32),
+                         params_like)
+    acc_out = zeros if algorithm == "decouple" else None
+    return StreamState(zeros, acc_out, jnp.zeros((), jnp.float32),
+                       jnp.zeros((), jnp.float32))
+
+
+def streaming_fold(state: StreamState, chunk: Tree, is_simple: jax.Array,
+                   valid: jax.Array, mask: Tree, *, algorithm: str,
+                   force_pallas_interpret: bool = False) -> StreamState:
+    """Fold one stacked chunk (z, ...) of client models into the sums.
+
+    Invalid (NaN / padding) devices carry weight 0 and are gated before the
+    multiply, so they can never poison the accumulators.  The masked partial
+    sum is one ``masked_agg`` kernel call per leaf on TPU.
+    """
+    w_in, w_out = _chunk_weights(is_simple, valid, algorithm)
+    chunk32 = jax.tree.map(lambda x: x.astype(jnp.float32), chunk)
+    part = agg_ops.masked_agg_tree(
+        chunk32, mask, w_in, w_out,
+        force_pallas_interpret=force_pallas_interpret)
+    acc = jax.tree.map(jnp.add, state.acc, part)
+    acc_out = state.acc_out
+    if acc_out is not None:
+        acc_out = jax.tree.map(
+            lambda a, x: a + _gated_wsum_leaf(x, w_out), acc_out, chunk32)
+    return StreamState(acc, acc_out, state.tot_in + jnp.sum(w_in),
+                       state.tot_out + jnp.sum(w_out))
+
+
+def streaming_finalize(state: StreamState, mask: Tree, template: Tree, *,
+                       algorithm: str) -> Tuple[Tree, Optional[Tree]]:
+    """Normalize the sums into server models, cast to ``template`` dtypes.
+
+    Returns ``(new_complex, new_simple_host)``; the host is ``None`` except
+    for decouple (matching ``ServerState``).  A group with zero total weight
+    yields zeros, like ``_norm_weights`` in the one-shot path.
+    """
+    def safe_div(tree, tot):
+        inv = jnp.where(tot > 0, 1.0 / jnp.maximum(tot, 1e-12), 0.0)
+        return jax.tree.map(lambda a: a * inv, tree)
+
+    mean_in = safe_div(state.acc, state.tot_in)
+    mean_out = safe_div(state.acc, state.tot_out)
+    cast = lambda tree: jax.tree.map(
+        lambda a, t: a.astype(t.dtype), tree, template)
+    combined = cast(masking.where_mask(mask, mean_in, mean_out))
+    if algorithm == "decouple":
+        new_complex = cast(safe_div(state.acc_out, state.tot_out))
+        return new_complex, combined
+    return combined, None

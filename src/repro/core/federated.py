@@ -7,10 +7,24 @@ Implements the paper's three algorithms over any adapter:
 * ``decouple`` — Alg. 3 (two independent FedAvg runs)
 
 Local training (Alg. 2): E epochs of minibatch SGD, eta, global-norm clip 10,
-per-device NaN exclusion (Appendix A).  A whole cohort trains inside one jit
-as ``vmap`` over clients of a ``scan`` over SGD steps — on the production
-mesh the cohort axis is sharded over ``data``/``pod`` (see launch/), making
-the server aggregation an all-reduce: the communication the paper saves.
+per-device NaN exclusion (Appendix A).
+
+**Streaming contract.**  A round is one jit (inputs donated): each
+population (simple, then complex) is split into chunks of
+``FedConfig.cohort_chunk`` clients, and ``lax.scan`` runs the vmap'd client
+trainer chunk by chunk, folding each trained chunk into running masked
+aggregation sums (``aggregate.streaming_fold``, the ``masked_agg`` kernel's
+contract) that are normalized once at the end of the round
+(``aggregate.streaming_finalize``).  Device memory is therefore O(chunk),
+not O(k) — cohorts of hundreds of clients stream through a fixed-size
+working set.  ``cohort_chunk=0`` trains each population in a single chunk
+(the old whole-cohort vmap).  Populations the chunk size does not divide are
+padded with zero-validity clients (wrapped data, weight 0), so padding can
+never change the aggregate; per-client RNG keys are derived by
+``fold_in(population_key, client_index)``, so the round's result is
+invariant to the chunking up to float summation order.  On the production
+mesh the chunk axis is sharded over ``data``/``pod`` (see launch/), making
+the per-chunk fold an all-reduce: the communication the paper saves.
 
 Cohort composition is stratified (k_s simple + k_c complex per round, the
 expectation of the paper's uniform 10% sampling) so shapes stay static;
@@ -107,7 +121,7 @@ class FederatedTrainer:
     def __init__(self, adapter, fed: FedConfig,
                  client_data: List[Batch], *,
                  rng: Optional[jax.Array] = None):
-        if fed.algorithm not in ("fedhen", "noside", "decouple"):
+        if fed.algorithm not in aggregate.ALGORITHMS:
             raise ValueError(fed.algorithm)
         self.adapter = adapter
         self.fed = fed
@@ -124,7 +138,11 @@ class FederatedTrainer:
         self.k_complex = max(int(round(fed.participation * n_complex)), 1)
         self.bytes_per_round = self._bytes_per_round()
         self.total_bytes = 0.0
-        self._round_fn = jax.jit(self._make_round_fn())
+        # donate the server state buffers into the round (they are replaced
+        # wholesale each round); CPU has no donation support, skip the noise
+        donate = (0, 1) if jax.default_backend() != "cpu" else ()
+        self._round_fn = jax.jit(self._make_round_fn(),
+                                 donate_argnums=donate)
 
     # -- communication accounting ------------------------------------------
 
@@ -140,7 +158,7 @@ class FederatedTrainer:
         # down + up for each active device
         return 2.0 * (self.k_simple * simple + self.k_complex * total)
 
-    # -- the jitted round ----------------------------------------------------
+    # -- the jitted round (streaming cohort engine) --------------------------
 
     def _make_round_fn(self):
         adapter, fed, mask = self.adapter, self.fed, self.mask
@@ -150,38 +168,68 @@ class FederatedTrainer:
                         else adapter.loss_complex)
         train_complex = make_client_trainer(complex_loss, fed)
 
+        def tile(tree, k):
+            return jax.tree.map(
+                lambda x: jnp.broadcast_to(x[None], (k,) + x.shape), tree)
+
+        def stream_population(state, src_params, train_fn, data, key, *,
+                              k: int, is_simple_flag: bool):
+            """scan over chunks: train + fold into the running sums.
+
+            Pads k up to a chunk multiple with zero-validity clients
+            (wrapped data) so shapes stay static; padding never reaches the
+            aggregate or the loss metric.
+            """
+            chunk = k if fed.cohort_chunk <= 0 else min(fed.cohort_chunk, k)
+            k_pad = -(-k // chunk) * chunk
+            n_chunks = k_pad // chunk
+            if k_pad != k:
+                idx = jnp.arange(k_pad) % k
+                data = jax.tree.map(lambda x: jnp.take(x, idx, axis=0), data)
+            keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(
+                jnp.arange(k_pad))
+            real = jnp.arange(k_pad) < k
+
+            to_chunks = lambda x: x.reshape((n_chunks, chunk) + x.shape[1:])
+            xs = (jax.tree.map(to_chunks, data), to_chunks(keys),
+                  to_chunks(real))
+            is_simple = jnp.full((chunk,), is_simple_flag)
+
+            def fold_chunk(carry, xs):
+                state, loss_sum, valid_sum = carry
+                data_i, keys_i, real_i = xs
+                trained, losses = jax.vmap(train_fn)(
+                    tile(src_params, chunk), data_i, keys_i)
+                valid = real_i
+                if fed.skip_nan_devices:
+                    valid = valid & jax.vmap(masking.tree_isfinite)(trained)
+                state = aggregate.streaming_fold(
+                    state, trained, is_simple, valid, mask, algorithm=algo)
+                loss_sum = loss_sum + jnp.sum(jnp.where(real_i, losses, 0.0))
+                valid_sum = valid_sum + jnp.sum(valid)
+                return (state, loss_sum, valid_sum), None
+
+            zero = jnp.zeros((), jnp.float32)
+            (state, loss_sum, valid_sum), _ = jax.lax.scan(
+                fold_chunk, (state, zero, zero), xs)
+            return state, loss_sum / k, valid_sum
+
         def round_fn(complex_params: Tree, simple_host: Optional[Tree],
                      data_s: Batch, data_c: Batch, rng: jax.Array):
-            ks, kc = self.k_simple, self.k_complex
             rs, rc = jax.random.split(rng)
-
-            def tile(tree, k):
-                return jax.tree.map(
-                    lambda x: jnp.broadcast_to(x[None], (k,) + x.shape), tree)
-
             src_simple = simple_host if algo == "decouple" else complex_params
-            cohort_s, loss_s = jax.vmap(train_simple)(
-                tile(src_simple, ks), data_s, jax.random.split(rs, ks))
-            cohort_c, loss_c = jax.vmap(train_complex)(
-                tile(complex_params, kc), data_c, jax.random.split(rc, kc))
-
-            cohort = jax.tree.map(lambda a, b: jnp.concatenate([a, b], 0),
-                                  cohort_s, cohort_c)
-            is_simple = jnp.arange(ks + kc) < ks
-            valid = jax.vmap(masking.tree_isfinite)(cohort)
-            if not fed.skip_nan_devices:
-                valid = jnp.ones_like(valid)
-
-            if algo in ("fedhen", "noside"):
-                new_complex = aggregate.fedhen_server_update(
-                    cohort, is_simple, valid, mask)
-                new_simple_host = None
-            else:
-                new_simple_host, new_complex = aggregate.decouple_server_update(
-                    cohort, is_simple, valid, mask)
-            metrics = {"loss_simple": jnp.mean(loss_s),
-                       "loss_complex": jnp.mean(loss_c),
-                       "n_valid": jnp.sum(valid)}
+            state = aggregate.streaming_init(complex_params, algo)
+            state, loss_s, valid_s = stream_population(
+                state, src_simple, train_simple, data_s, rs,
+                k=self.k_simple, is_simple_flag=True)
+            state, loss_c, valid_c = stream_population(
+                state, complex_params, train_complex, data_c, rc,
+                k=self.k_complex, is_simple_flag=False)
+            new_complex, new_simple_host = aggregate.streaming_finalize(
+                state, mask, complex_params, algorithm=algo)
+            metrics = {"loss_simple": loss_s,
+                       "loss_complex": loss_c,
+                       "n_valid": valid_s + valid_c}
             return new_complex, new_simple_host, metrics
 
         return round_fn
@@ -201,6 +249,19 @@ class FederatedTrainer:
         return jax.tree.map(lambda *xs: jnp.stack(xs), *datasets)
 
     # -- public API ----------------------------------------------------------
+
+    def lower_round(self):
+        """AOT-lower the jitted round with this trainer's shapes.
+
+        Used by benchmarks/tests to inspect the compiled round (peak memory,
+        HLO) without running it.  Consumes one cohort sample from the
+        host-side sampler.
+        """
+        simple_ids, complex_ids = self._sample_cohort()
+        key = jax.random.PRNGKey(self.fed.seed * 100003 + self.server.round)
+        return self._round_fn.lower(
+            self.server.complex, self.server.simple_host,
+            self._gather(simple_ids), self._gather(complex_ids), key)
 
     def run_round(self) -> Dict[str, float]:
         simple_ids, complex_ids = self._sample_cohort()

@@ -1,12 +1,19 @@
 """Jit'd wrapper: masked cohort aggregation over parameter pytrees.
 
+This is the server hot path: ``core.aggregate.streaming_fold`` calls
+``masked_agg_tree`` once per cohort chunk with *raw* (unnormalized) weights,
+accumulating partial sums that are divided once per round — so each client
+model leaf streams through the kernel exactly once regardless of chunking.
+
 Backend selection: the Pallas kernel targets TPU; on CPU (this container)
 the XLA reference path runs instead — set ``force_pallas_interpret=True``
-to exercise the kernel body in interpret mode (tests do).
+to exercise the kernel body in interpret mode (tests do), or
+``REPRO_MASKED_AGG=ref|pallas`` to override the automatic choice.
 """
 
 from __future__ import annotations
 
+import os
 from typing import Any
 
 import jax
@@ -19,6 +26,9 @@ Tree = Any
 
 
 def _use_pallas() -> bool:
+    override = os.environ.get("REPRO_MASKED_AGG", "")
+    if override in ("ref", "pallas"):
+        return override == "pallas"
     return jax.default_backend() == "tpu"
 
 
@@ -42,8 +52,12 @@ def masked_agg_leaf(x: jax.Array, mask: jax.Array, w_m: jax.Array,
 
 def masked_agg_tree(cohort: Tree, mask_tree: Tree, w_m: jax.Array,
                     w_rest: jax.Array, **kw) -> Tree:
-    """Apply the aggregation across a stacked cohort pytree (FedHeN server
-    step: w_m = valid/|Z| weights, w_rest = complex-only weights)."""
+    """Apply the aggregation across a stacked cohort pytree.
+
+    Weights are RAW per-client coefficients (a weighted *sum*, not a
+    mean): the streaming server step passes unnormalized validity weights
+    per chunk and divides by the running totals once per round.  Callers
+    wanting a mean must normalize w_m/w_rest themselves."""
     return jax.tree.map(
         lambda x, m: masked_agg_leaf(x, m, w_m, w_rest, **kw),
         cohort, mask_tree)

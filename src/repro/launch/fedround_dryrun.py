@@ -12,11 +12,16 @@ over ``data``/``pod`` that *is* the federated communication round.  The
 HLO collective schedule therefore shows the paper's upload/aggregate
 traffic explicitly; FedHeN's fewer-rounds saving multiplies exactly this.
 
+With ``cohort_chunk`` (4th arg) the round streams the cohort through the
+chunked engine (``steps.make_fed_round_step``): K can exceed the data-axis
+size by any multiple while the per-chip working set stays O(chunk).
+
 Usage:
     PYTHONPATH=src python -m repro.launch.fedround_dryrun \
-        [arch] [local_steps] [single|multi]
+        [arch] [local_steps] [single|multi] [cohort_chunk]
 """
 
+import math
 import sys
 import time
 
@@ -25,66 +30,45 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import configs
-from repro.core import aggregate, masking
-from repro.core.adapters import LMAdapter
 from repro.launch import sharding
 from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import make_fed_round_step
 from repro.models import transformer as tfm
-from repro.optim.sgd import sgd_update
 from repro.roofline import analysis, hlo_walk
 
 
-def make_round_step(cfg, policy, *, local_steps: int, lr=0.1, clip=10.0):
-    adapter = LMAdapter(cfg, policy=policy, remat=True)
-
-    def client_train(params, data, is_simple):
-        """One client: local_steps of SGD (side objective for complex
-        clients, subnet objective for simple ones — branchless select)."""
-        def step(p, batch):
-            loss_c, g_c = jax.value_and_grad(adapter.loss_side)(p, batch)
-            loss_s, g_s = jax.value_and_grad(adapter.loss_simple)(p, batch)
-            g = jax.tree.map(lambda a, b: jnp.where(is_simple, b, a),
-                             g_c, g_s)
-            return sgd_update(p, g, lr, clip), loss_c
-        for i in range(local_steps):
-            batch = {"tokens": data[:, i]}
-            params, loss = step(params, batch)
-        return params, loss
-
-    def round_step(cohort, data, is_simple):
-        """cohort: stacked client params (K, ...); data (K, B, steps, S+1);
-        is_simple (K,).  Returns the new server complex model."""
-        trained, losses = jax.vmap(client_train)(
-            cohort, data.transpose(0, 2, 1, 3), is_simple)
-        valid = jax.vmap(masking.tree_isfinite)(trained)
-        mask = masking.transformer_subnet_mask(
-            jax.tree.map(lambda x: x[0], cohort), cfg)
-        new_complex = aggregate.fedhen_server_update(
-            trained, is_simple, valid, mask)
-        return new_complex, jnp.mean(losses)
-
-    return round_step
+def make_round_step(cfg, policy, *, local_steps: int, lr=0.1, clip=10.0,
+                    cohort_chunk: int = 0):
+    """The streamed FedHeN round step (see ``steps.make_fed_round_step``)."""
+    return make_fed_round_step(cfg, policy, local_steps=local_steps, lr=lr,
+                               clip_norm=clip, cohort_chunk=cohort_chunk)
 
 
 def main():
     arch = sys.argv[1] if len(sys.argv) > 1 else "gemma2-2b"
     local_steps = int(sys.argv[2]) if len(sys.argv) > 2 else 2
     multi = len(sys.argv) > 3 and sys.argv[3] == "multi"
+    cohort_chunk = int(sys.argv[4]) if len(sys.argv) > 4 else 0
 
     cfg = configs.get_config(arch)
     mesh = make_production_mesh(multi_pod=multi)
     policy = sharding.MeshPolicy(mesh, cfg)
-    k_clients = mesh.shape["data"] * mesh.shape.get("pod", 1)
+    data_size = mesh.shape["data"] * mesh.shape.get("pod", 1)
+    # with chunking the cohort scales past the data axis (4x), rounded up
+    # so that both the chunk size (the launch-side engine errors instead of
+    # padding) and the data axis (pjit input sharding) divide it
+    if cohort_chunk <= 0:
+        k_clients = data_size
+    else:
+        step = math.lcm(cohort_chunk, data_size)
+        k_clients = -(-4 * data_size // step) * step
     seq, batch = 1024, 4
 
     params_abs = jax.eval_shape(lambda k: tfm.init_params(k, cfg),
                                 jax.random.PRNGKey(0))
-    p_specs = sharding.param_specs(params_abs, cfg, mesh)
     data_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
     # cohort axis over data/pod; each client's params model-sharded within
-    cohort_specs = jax.tree.map(
-        lambda s: NamedSharding(mesh, P(data_axes, *tuple(s))), p_specs,
-        is_leaf=lambda x: isinstance(x, P))
+    cohort_specs = sharding.cohort_specs(params_abs, cfg, mesh)
     cohort_abs = jax.tree.map(
         lambda x: jax.ShapeDtypeStruct((k_clients,) + x.shape, x.dtype),
         params_abs)
@@ -93,7 +77,8 @@ def main():
     flags_abs = jax.ShapeDtypeStruct((k_clients,), jnp.bool_)
     d_spec = NamedSharding(mesh, P(data_axes))
 
-    step = make_round_step(cfg, policy, local_steps=local_steps)
+    step = make_round_step(cfg, policy, local_steps=local_steps,
+                           cohort_chunk=cohort_chunk)
     t0 = time.time()
     with mesh:
         lowered = jax.jit(step, in_shardings=(cohort_specs, d_spec, d_spec),
@@ -108,6 +93,7 @@ def main():
                       for x in jax.tree.leaves(params_abs))
     print(f"\nFedHeN round dry-run: {cfg.name}, K={k_clients} clients x "
           f"{local_steps} local steps, mesh {'2x16x16' if multi else '16x16'}"
+          f"{f', chunk={cohort_chunk}' if cohort_chunk else ''}"
           f" (compiled in {dt:.0f}s)")
     print(f"  per-chip peak (CPU-sched upper bound): "
           f"{(mem.temp_size_in_bytes + mem.argument_size_in_bytes) / 2**30:.1f} GiB")

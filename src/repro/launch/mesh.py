@@ -11,22 +11,26 @@ from __future__ import annotations
 import jax
 
 
+def _make_mesh(shape, axes) -> jax.sharding.Mesh:
+    # jax >= 0.5 wants explicit axis_types; 0.4.x has no AxisType at all
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    kw = {} if axis_type is None else \
+        {"axis_types": (axis_type.Auto,) * len(axes)}
+    return jax.make_mesh(shape, axes, **kw)
+
+
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     """Single pod: (16, 16) = 256 chips as ("data", "model").
     Multi-pod: (2, 16, 16) = 512 chips as ("pod", "data", "model")."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_debug_mesh(n_data: int = 2, n_model: int = 2) -> jax.sharding.Mesh:
     """Small mesh for CPU-host sharding tests (requires enough host
     devices, e.g. XLA_FLAGS=--xla_force_host_platform_device_count=8)."""
-    return jax.make_mesh(
-        (n_data, n_model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return _make_mesh((n_data, n_model), ("data", "model"))
 
 
 def data_axes(mesh: jax.sharding.Mesh):

@@ -85,6 +85,11 @@ class MeshPolicy(Policy):
             # decode KV caches: shard the key/value sequence over `model`
             # when the kv heads cannot use it (context-parallel decode)
             "kv_seq": "model",
+            # federated cohort chunk axis (one client per data slice): the
+            # streaming round engine scans over chunks and each chunk's
+            # client axis shards over data/pod, so the per-chunk masked
+            # aggregation fold lowers to the round's all-reduce
+            "cohort": data,
         }
         # resolution priority when two logical names want the same mesh axis
         self.priority = {"kv_seq": 1, "seq": 1}  # vocab/heads first
@@ -266,6 +271,22 @@ def param_specs(params: Tree, cfg: ModelConfig, mesh: Mesh) -> Tree:
         specs.append(_leaf_param_spec(keys, tuple(leaf.shape), cfg, mesh,
                                       stacked))
     return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def cohort_specs(params: Tree, cfg: ModelConfig, mesh: Mesh) -> Tree:
+    """NamedSharding tree for a *stacked cohort* of client models.
+
+    The leading client axis shards over ``data``/``pod`` (one client per
+    data slice); each client's parameters keep their model-parallel layout
+    from :func:`param_specs` within.  The streaming round engine reshapes
+    to ``(n_chunks, chunk, ...)`` inside the jit, so each scan step is one
+    data-parallel cohort chunk of this layout.
+    """
+    data = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, P(data, *tuple(s))),
+        param_specs(params, cfg, mesh),
+        is_leaf=lambda x: isinstance(x, P))
 
 
 # ---------------------------------------------------------------------------

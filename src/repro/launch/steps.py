@@ -6,6 +6,11 @@
   cohort/round structure wraps it in core/federated.py.
 * ``baseline_train_step`` — same without the side objective (NoSide /
   Decouple inner step) — used to measure the side objective's marginal cost.
+* ``fed_round_step`` — one complete FedHeN round over a stacked cohort,
+  streamed in ``cohort_chunk``-sized chunks (``lax.scan``) through the
+  masked-aggregation fold; the chunk's client axis is policy-constrained to
+  the ``data``/``pod`` mesh axes (the ``cohort`` logical rule), so the fold
+  lowers to the round's all-reduce while memory stays O(chunk).
 * ``prefill_step`` — logits + decode cache for a prompt batch.
 * ``serve_step`` — ONE token against a seq_len cache (decode shapes).
 """
@@ -19,6 +24,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import InputShape, ModelConfig
+from repro.core import aggregate, masking
 from repro.core.adapters import LMAdapter
 from repro.models import transformer as tfm
 from repro.models.common import NO_POLICY, Policy
@@ -39,6 +45,75 @@ def make_train_step(cfg: ModelConfig, policy: Policy = NO_POLICY, *,
         return new_params, {"loss": loss}
 
     return train_step
+
+
+def make_fed_round_step(cfg: ModelConfig, policy: Policy = NO_POLICY, *,
+                        local_steps: int, lr: float = 0.1,
+                        clip_norm: float = 10.0, cohort_chunk: int = 0):
+    """One FedHeN round over a stacked cohort, streaming in chunks.
+
+    Returns ``round_step(cohort, data, is_simple) -> (new_complex, loss)``
+    with ``cohort`` stacked client params (K, ...), ``data`` of shape
+    (K, B, local_steps, S+1) and ``is_simple`` (K,).  ``cohort_chunk`` must
+    divide K (0 = one chunk); the engine scans chunk by chunk, folding each
+    trained chunk into running masked sums (``aggregate.streaming``) — the
+    launch-side mirror of core/federated.py's round, operating on an
+    externally sharded cohort instead of tiling server params.
+    """
+    adapter = LMAdapter(cfg, policy=policy, remat=True)
+
+    def constrain_cohort(tree):
+        return jax.tree.map(
+            lambda x: policy.constrain(
+                x, ("cohort",) + (None,) * (x.ndim - 1)), tree)
+
+    def client_train(params, data, is_simple):
+        """One client: local_steps of SGD (side objective for complex
+        clients, subnet objective for simple ones — branchless select)."""
+        def step(p, batch):
+            loss_c, g_c = jax.value_and_grad(adapter.loss_side)(p, batch)
+            loss_s, g_s = jax.value_and_grad(adapter.loss_simple)(p, batch)
+            g = jax.tree.map(lambda a, b: jnp.where(is_simple, b, a),
+                             g_c, g_s)
+            return sgd_update(p, g, lr, clip_norm), loss_c
+        for i in range(local_steps):
+            batch = {"tokens": data[:, i]}
+            params, loss = step(params, batch)
+        return params, loss
+
+    def round_step(cohort: Tree, data: jax.Array, is_simple: jax.Array):
+        k = data.shape[0]
+        chunk = k if cohort_chunk <= 0 else cohort_chunk
+        if k % chunk:
+            raise ValueError(
+                f"cohort_chunk={chunk} does not divide cohort size {k}")
+        n_chunks = k // chunk
+        template = jax.tree.map(lambda x: x[0], cohort)
+        mask = masking.transformer_subnet_mask(template, cfg)
+
+        to_chunks = lambda x: x.reshape((n_chunks, chunk) + x.shape[1:])
+        xs = (jax.tree.map(to_chunks, cohort), to_chunks(data),
+              to_chunks(is_simple))
+
+        def fold_chunk(carry, xs):
+            state, loss_sum = carry
+            cohort_i, data_i, simple_i = xs
+            cohort_i = constrain_cohort(cohort_i)
+            trained, losses = jax.vmap(client_train)(
+                cohort_i, data_i.transpose(0, 2, 1, 3), simple_i)
+            valid = jax.vmap(masking.tree_isfinite)(trained)
+            state = aggregate.streaming_fold(
+                state, trained, simple_i, valid, mask, algorithm="fedhen")
+            return (state, loss_sum + jnp.sum(losses)), None
+
+        state = aggregate.streaming_init(template, "fedhen")
+        (state, loss_sum), _ = jax.lax.scan(
+            fold_chunk, (state, jnp.zeros((), jnp.float32)), xs)
+        new_complex, _ = aggregate.streaming_finalize(
+            state, mask, template, algorithm="fedhen")
+        return new_complex, loss_sum / k
+
+    return round_step
 
 
 def make_prefill_step(cfg: ModelConfig, policy: Policy = NO_POLICY, *,

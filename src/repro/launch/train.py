@@ -41,7 +41,7 @@ def build_trainer(args) -> tuple:
         local_epochs=args.local_epochs, lr=args.lr,
         batch_size=args.batch_size, iid=not args.non_iid,
         dirichlet_alpha=args.alpha, algorithm=args.algorithm,
-        seed=args.seed)
+        seed=args.seed, cohort_chunk=args.cohort_chunk)
 
     if args.model == "resnet":
         data = synthetic_cifar(args.data_points, 10, seed=args.seed)
@@ -81,6 +81,9 @@ def main(argv=None):
     ap.add_argument("--rounds", type=int, default=20)
     ap.add_argument("--clients", type=int, default=20)
     ap.add_argument("--participation", type=float, default=0.1)
+    ap.add_argument("--cohort-chunk", type=int, default=0,
+                    help="stream the cohort in chunks of this many clients "
+                         "(0 = whole cohort at once); memory is O(chunk)")
     ap.add_argument("--local-epochs", type=int, default=5)
     ap.add_argument("--lr", type=float, default=0.1)
     ap.add_argument("--batch-size", type=int, default=50)

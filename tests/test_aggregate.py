@@ -1,0 +1,149 @@
+"""Server aggregation unit tests against numpy oracles (Alg. 1 ln. 16-22),
+one-shot AND streaming paths.  Referenced by the ``fedhen_server_update``
+docstring."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import aggregate, masking
+
+
+def _random_case(seed, z=9):
+    rng = np.random.default_rng(seed)
+    cohort = {"a": jnp.asarray(rng.normal(size=(z, 4, 3)).astype(np.float32)),
+              "b": jnp.asarray(rng.normal(size=(z, 5)).astype(np.float32))}
+    mask = {"a": jnp.asarray(True), "b": jnp.asarray(False)}
+    is_simple = jnp.asarray(np.arange(z) < z // 2)
+    valid = jnp.ones(z, bool)
+    return cohort, mask, is_simple, valid
+
+
+def _np_group_mean(x, sel):
+    sel = np.asarray(sel)
+    if not sel.any():
+        return np.zeros(x.shape[1:], x.dtype)
+    return np.asarray(x)[sel].mean(0)
+
+
+# ---------------------------------------------------------------------------
+# One-shot path vs numpy oracle
+# ---------------------------------------------------------------------------
+
+def test_fedhen_m_slice_invariant():
+    """The server simple model IS the M slice of the new complex model:
+    inside M the update is the all-devices mean, outside the complex-only
+    mean — exactly Alg. 1 ln. 18-22."""
+    cohort, mask, is_simple, valid = _random_case(0)
+    new = aggregate.fedhen_server_update(cohort, is_simple, valid, mask)
+    v, s = np.asarray(valid), np.asarray(is_simple)
+    np.testing.assert_allclose(  # M slice ("a"): mean over ALL valid
+        new["a"], _np_group_mean(cohort["a"], v), rtol=1e-5)
+    np.testing.assert_allclose(  # M' ("b"): complex-only mean
+        new["b"], _np_group_mean(cohort["b"], v & ~s), rtol=1e-5)
+
+
+def test_nan_device_exclusion():
+    cohort, mask, is_simple, _ = _random_case(1)
+    cohort["a"] = cohort["a"].at[2].set(jnp.nan)
+    cohort["b"] = cohort["b"].at[7, 0].set(jnp.inf)
+    valid = jax.vmap(masking.tree_isfinite)(cohort)
+    assert not bool(valid[2]) and not bool(valid[7])
+    new = aggregate.fedhen_server_update(cohort, is_simple, valid, mask)
+    for leaf in jax.tree.leaves(new):
+        assert np.isfinite(np.asarray(leaf)).all()
+    v, s = np.asarray(valid), np.asarray(is_simple)
+    ok = np.isfinite(np.asarray(cohort["a"])).all(axis=(1, 2))
+    np.testing.assert_allclose(
+        new["a"], _np_group_mean(cohort["a"], v & ok), rtol=1e-5)
+
+
+def test_decouple_group_means():
+    """Decouple = two independent FedAvg runs: M slice averages simple
+    devices only, everything else complex devices only."""
+    cohort, mask, is_simple, valid = _random_case(2)
+    host, new_complex = aggregate.decouple_server_update(
+        cohort, is_simple, valid, mask)
+    v, s = np.asarray(valid), np.asarray(is_simple)
+    np.testing.assert_allclose(
+        host["a"], _np_group_mean(cohort["a"], v & s), rtol=1e-5)
+    np.testing.assert_allclose(
+        host["b"], _np_group_mean(cohort["b"], v & ~s), rtol=1e-5)
+    for key in ("a", "b"):  # complex model: complex-only mean everywhere
+        np.testing.assert_allclose(
+            new_complex[key], _np_group_mean(cohort[key], v & ~s), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Streaming path == one-shot path
+# ---------------------------------------------------------------------------
+
+def _stream(cohort, mask, is_simple, valid, algo, chunk, **fold_kw):
+    z = jax.tree.leaves(cohort)[0].shape[0]
+    template = jax.tree.map(lambda x: x[0], cohort)
+    state = aggregate.streaming_init(template, algo)
+    for lo in range(0, z, chunk):
+        sl = slice(lo, min(lo + chunk, z))
+        state = aggregate.streaming_fold(
+            state, jax.tree.map(lambda x: x[sl], cohort),
+            is_simple[sl], valid[sl], mask, algorithm=algo, **fold_kw)
+    return aggregate.streaming_finalize(state, mask, template,
+                                        algorithm=algo)
+
+
+@pytest.mark.parametrize("algo", ["fedhen", "noside", "decouple"])
+@pytest.mark.parametrize("chunk", [1, 2, 9])
+def test_streaming_matches_one_shot(algo, chunk):
+    cohort, mask, is_simple, valid = _random_case(3)
+    valid = valid.at[4].set(False)  # one dropped device crosses chunks
+    if algo == "decouple":
+        want_host, want_c = aggregate.decouple_server_update(
+            cohort, is_simple, valid, mask)
+    else:
+        want_c = aggregate.fedhen_server_update(cohort, is_simple, valid,
+                                                mask)
+        want_host = None
+    got_c, got_host = _stream(cohort, mask, is_simple, valid, algo, chunk)
+    for g, w in zip(jax.tree.leaves(got_c), jax.tree.leaves(want_c)):
+        np.testing.assert_allclose(g, w, rtol=2e-5, atol=2e-6)
+    if want_host is None:
+        assert got_host is None
+    else:
+        for g, w in zip(jax.tree.leaves(got_host),
+                        jax.tree.leaves(want_host)):
+            np.testing.assert_allclose(g, w, rtol=2e-5, atol=2e-6)
+
+
+def test_streaming_fold_pallas_interpret():
+    """The fold's kernel dispatch (interpret mode) matches the XLA path."""
+    cohort, mask, is_simple, valid = _random_case(4)
+    ref_c, _ = _stream(cohort, mask, is_simple, valid, "fedhen", 3)
+    ker_c, _ = _stream(cohort, mask, is_simple, valid, "fedhen", 3,
+                       force_pallas_interpret=True)
+    for g, w in zip(jax.tree.leaves(ker_c), jax.tree.leaves(ref_c)):
+        np.testing.assert_allclose(g, w, rtol=1e-5, atol=1e-6)
+
+
+def test_streaming_zero_weight_group_is_zero():
+    """An empty group (no valid complex devices) yields zeros, like the
+    one-shot ``_norm_weights`` guard — never NaN from 0/0."""
+    cohort, mask, is_simple, _ = _random_case(5)
+    valid = jnp.asarray(np.asarray(is_simple))  # only simple devices valid
+    got_c, _ = _stream(cohort, mask, is_simple, valid, "fedhen", 2)
+    np.testing.assert_allclose(got_c["b"], np.zeros_like(got_c["b"]))
+    v = np.asarray(valid)
+    np.testing.assert_allclose(got_c["a"], _np_group_mean(cohort["a"], v),
+                               rtol=1e-5)
+
+
+def test_streaming_rejects_unknown_algorithm():
+    cohort, mask, is_simple, valid = _random_case(6)
+    with pytest.raises(ValueError):
+        aggregate.streaming_init(jax.tree.map(lambda x: x[0], cohort),
+                                 "fedavg")
+    with pytest.raises(ValueError):
+        aggregate.streaming_fold(
+            aggregate.streaming_init(jax.tree.map(lambda x: x[0], cohort),
+                                     "fedhen"),
+            cohort, is_simple, valid, mask, algorithm="fedavg")

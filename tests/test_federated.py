@@ -173,6 +173,112 @@ def test_rounds_to_target():
 
 
 # ---------------------------------------------------------------------------
+# Streaming cohort engine: chunked rounds == one-shot rounds
+# ---------------------------------------------------------------------------
+
+def _make_chunked_trainer(algorithm, chunk, *, n_devices=12):
+    """ks = kc = n_devices/4 active clients per population."""
+    fed = FedConfig(n_devices=n_devices, n_simple=n_devices // 2,
+                    participation=0.5, rounds=3, local_epochs=1, lr=0.1,
+                    clip_norm=10.0, batch_size=4, algorithm=algorithm,
+                    seed=0, cohort_chunk=chunk)
+    data = synthetic_lm(n_devices * 4, 16, TINY.vocab_size, seed=1)
+    shards = iid_split(data, fed.n_devices, seed=2)
+    return FederatedTrainer(LMAdapter(TINY), fed, shards)
+
+
+def _assert_server_allclose(a, b, rtol=3e-5, atol=3e-6):
+    for x, y in zip(jax.tree.leaves(a.server.complex),
+                    jax.tree.leaves(b.server.complex)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=rtol, atol=atol)
+    if a.server.simple_host is not None:
+        for x, y in zip(jax.tree.leaves(a.server.simple_host),
+                        jax.tree.leaves(b.server.simple_host)):
+            np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                       rtol=rtol, atol=atol)
+
+
+@pytest.mark.parametrize("algorithm", ["fedhen", "noside", "decouple"])
+@pytest.mark.parametrize("chunk", [1, 3, 0])   # 0 = whole population (k)
+def test_chunked_round_matches_one_shot(algorithm, chunk):
+    """cohort_chunk only changes the execution schedule, never the round's
+    result: server state after a chunked round == the one-shot round."""
+    ref = _make_chunked_trainer(algorithm, 0)
+    tr = _make_chunked_trainer(algorithm, chunk)
+    m_ref = ref.run_round()
+    m = tr.run_round()
+    _assert_server_allclose(ref, tr)
+    assert m["n_valid"] == m_ref["n_valid"]
+    assert abs(m["loss_simple"] - m_ref["loss_simple"]) < 1e-4
+    assert abs(m["loss_complex"] - m_ref["loss_complex"]) < 1e-4
+
+
+@pytest.mark.parametrize("algorithm", ["fedhen", "noside", "decouple"])
+def test_chunk_not_dividing_k_is_padded(algorithm):
+    """ks = kc = 3 with chunk 2: populations are padded with zero-validity
+    clients; the padding must not change the aggregate or the metrics."""
+    ref = _make_chunked_trainer(algorithm, 0)
+    tr = _make_chunked_trainer(algorithm, 2)   # 2 does not divide 3
+    m_ref = ref.run_round()
+    m = tr.run_round()
+    _assert_server_allclose(ref, tr)
+    assert m["n_valid"] == m_ref["n_valid"] == tr.k_simple + tr.k_complex
+    assert abs(m["loss_simple"] - m_ref["loss_simple"]) < 1e-4
+
+
+def test_chunked_multi_round_stays_on_trajectory():
+    """Chunking composes over rounds (the carry is re-chunked each round)."""
+    ref = _make_chunked_trainer("fedhen", 0)
+    tr = _make_chunked_trainer("fedhen", 2)
+    for _ in range(3):
+        ref.run_round()
+        tr.run_round()
+    _assert_server_allclose(ref, tr, rtol=2e-4, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# Communication accounting
+# ---------------------------------------------------------------------------
+
+class _ToyAdapter:
+    """Fixed tiny param tree with a known mask: 4 floats in M ("a"),
+    3 floats outside ("b")."""
+
+    def init(self, key):
+        return {"a": jnp.zeros((2, 2), jnp.float32),
+                "b": jnp.zeros((3,), jnp.float32)}
+
+    def subnet_mask(self, params):
+        return {"a": jnp.asarray(True), "b": jnp.asarray(False)}
+
+    loss_simple = loss_complex = loss_side = staticmethod(
+        lambda params, batch: jnp.zeros(()))
+
+
+def test_bytes_per_round_hand_computed():
+    """down+up x (k_s x |M| + k_c x |w_c|) x 4 bytes, by hand: k_s = k_c = 1,
+    |M| = 16 B, |w_c| = 28 B -> 2 x (16 + 28) = 88 B."""
+    fed = FedConfig(n_devices=4, n_simple=2, participation=0.5,
+                    algorithm="fedhen")
+    tr = FederatedTrainer(_ToyAdapter(), fed, client_data=[])
+    assert tr.k_simple == 1 and tr.k_complex == 1
+    assert tr.bytes_per_round == 2.0 * (1 * 16 + 1 * 28) == 88.0
+
+
+def test_total_bytes_invariant_under_chunking():
+    """Chunking is an execution detail: what is *communicated* per round
+    (and in total) must not depend on cohort_chunk."""
+    ref = _make_chunked_trainer("fedhen", 0)
+    tr = _make_chunked_trainer("fedhen", 2)
+    assert tr.bytes_per_round == ref.bytes_per_round
+    for _ in range(2):
+        ref.run_round()
+        tr.run_round()
+    assert tr.total_bytes == ref.total_bytes > 0
+
+
+# ---------------------------------------------------------------------------
 # Splits
 # ---------------------------------------------------------------------------
 

@@ -38,9 +38,12 @@ def test_scan_multiplies_by_trip_count():
     # allow small over/under from loop bookkeeping fusions
     assert abs(got - expect) / expect < 0.05, (got, expect)
     # sanity: XLA's own cost analysis misses the trip count (the reason this
-    # walker exists)
-    xla = jax.jit(f).lower(a, w).compile().cost_analysis()["flops"]
-    assert xla < 0.3 * expect
+    # walker exists); cost_analysis returns a per-device list on some jax
+    # versions and a plain dict on others
+    ca = jax.jit(f).lower(a, w).compile().cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    assert ca["flops"] < 0.3 * expect
 
 
 def test_nested_scan():
