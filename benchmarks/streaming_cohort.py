@@ -1,17 +1,41 @@
-"""Streaming cohort engine: cohort size x chunk size sweep.
+"""Streaming cohort engine: cohort size x chunk size x engine sweep.
 
-Measures, for each (cohort k, cohort_chunk) point, the compiled round's
-peak temp memory (``memory_analysis().temp_size_in_bytes`` of the AOT
-round — XLA's scheduled scratch high-water mark, the quantity the
-streaming engine bounds) and the wall-clock round latency.
+Measures, for each (cohort k, cohort_chunk, agg_engine) point, the
+compiled round's peak temp memory (``memory_analysis().temp_size_in_bytes``
+of the AOT round — XLA's scheduled scratch high-water mark, the quantity
+the streaming engine bounds), the HLO op / reduce counts (the flat engine
+collapses one masked-agg reduction per leaf into ONE per fold), and the
+wall-clock round latency.
 
-The headline row: a cohort 4x the seed default (k=40 vs k=10) streamed
-with ``cohort_chunk=5`` must fit under the one-shot k=10 round's peak temp
-memory — that is the scale the engine buys (ISSUE 2 acceptance).
+Headline rows:
+
+* ``k40_chunk5`` — a cohort 4x the seed default (k=40 vs k=10) streamed
+  with ``cohort_chunk=5`` must fit under the one-shot k=10 round's peak
+  temp memory (ISSUE 2 acceptance).
+* ``k40_chunk5`` (flat) vs ``k40_chunk5_tree`` — the flat-buffer fold must
+  use no more temp memory than the per-leaf tree fold
+  (``fold_temp_bytes``, the aggregation program lowered alone — flat
+  compiles to ZERO scratch on CPU, in-place accumulation, vs the tree
+  fold's per-leaf temps) and the compiled round must carry fewer reduce
+  ops (ISSUE 3 acceptance).
+
+Round-level ``temp_bytes`` is reported for both engines too.  Note its
+flat-vs-tree delta on CPU is allocator noise, not engine cost: the round
+arena is dominated by identical client-training scratch, and XLA's buffer
+assignment tucks the tree engine's 28 small accumulators into arena holes
+where the flat engine's one contiguous accumulator cannot go (measured
++0.46% here; the fold-scoped numbers above isolate what the engine owns,
+and on TPU the ``input_output_aliases`` accumulator removes the second
+copy entirely).
+
+Run as a script to emit ``BENCH_streaming.json`` and exit nonzero on a
+regression (the CI smoke): ``python benchmarks/streaming_cohort.py --fast``.
 """
 
 from __future__ import annotations
 
+import argparse
+import json
 import time
 from typing import Dict, List, Tuple
 
@@ -29,52 +53,151 @@ STREAM_CFG = ModelConfig(n_layers=4, d_model=64, n_heads=4, n_kv_heads=2,
                          pattern=(LayerSpec("attn"),), exit_layer=2,
                          compute_dtype="float32")
 
-# (label, total clients, cohort_chunk); participation 0.5 -> k = clients/2.
-# k=10 matches the seed FedConfig default cohort (100 devices x 10%).
-SWEEP: Tuple[Tuple[str, int, int], ...] = (
-    ("k10_chunk0", 20, 0),    # seed-default cohort, one-shot
-    ("k10_chunk5", 20, 5),
-    ("k40_chunk0", 80, 0),    # 4x cohort, one-shot: the memory blow-up
-    ("k40_chunk10", 80, 10),
-    ("k40_chunk5", 80, 5),    # 4x cohort streamed: the acceptance row
+# (label, total clients, cohort_chunk, agg_engine); participation 0.5 ->
+# k = clients/2.  k=10 matches the seed FedConfig default cohort
+# (100 devices x 10%).
+SWEEP: Tuple[Tuple[str, int, int, str], ...] = (
+    ("k10_chunk0", 20, 0, "flat"),      # seed-default cohort, one-shot
+    ("k10_chunk5", 20, 5, "flat"),
+    ("k40_chunk0", 80, 0, "flat"),      # 4x cohort, one-shot: memory blow-up
+    ("k40_chunk10", 80, 10, "flat"),
+    ("k40_chunk5", 80, 5, "flat"),      # 4x cohort streamed: acceptance row
+    ("k40_chunk5_tree", 80, 5, "tree"),  # per-leaf fold: the flat-vs-tree row
 )
 
 
-def build_trainer(n_devices: int, chunk: int, *,
+def build_trainer(n_devices: int, chunk: int, *, engine: str = "flat",
                   timed_rounds: int) -> FederatedTrainer:
     fed = FedConfig(n_devices=n_devices, n_simple=n_devices // 2,
                     participation=0.5, rounds=timed_rounds, local_epochs=1,
                     lr=0.1, batch_size=8, algorithm="fedhen", seed=0,
-                    cohort_chunk=chunk)
+                    cohort_chunk=chunk, agg_engine=engine)
     data = synthetic_lm(n_devices * 16, 32, STREAM_CFG.vocab_size, seed=1)
     shards = iid_split(data, fed.n_devices, seed=2)
     shards = [{"tokens": jnp.asarray(s["tokens"])} for s in shards]
     return FederatedTrainer(LMAdapter(STREAM_CFG), fed, shards)
 
 
-def measure(n_devices: int, chunk: int, *, timed_rounds: int = 3) -> Dict:
-    trainer = build_trainer(n_devices, chunk, timed_rounds=timed_rounds)
+def measure_fold(trainer, z: int) -> Dict:
+    """Lower ONE aggregation fold (z stacked clients) by itself: the temp
+    bytes and op counts the engine owns, isolated from training scratch."""
+    from repro.core import aggregate
+    engine = trainer.fed.agg_engine
+    template = trainer.server.complex
+    mask = trainer.mask
+    chunk = jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (z,) + x.shape), template)
+    is_simple = jnp.zeros(z, bool)
+    valid = jnp.ones(z, bool)
+
+    def bind(flat_mask):
+        """flat_mask enters as a traced argument (mirroring the round jit)"""
+        return aggregate.make_engine(
+            engine, algorithm="fedhen", mask=mask,
+            layout=trainer.layout if engine == "flat" else None,
+            flat_mask=flat_mask, block_n=trainer.fed.agg_block_n)
+
+    state = bind(None)[0](template)
+    if engine == "flat":
+        fold = lambda s, c, i, v, fm: bind(fm)[1](s, c, i, v)
+        args = (state, chunk, is_simple, valid, trainer.flat_mask)
+    else:
+        fold = lambda s, c, i, v: bind(None)[1](s, c, i, v)
+        args = (state, chunk, is_simple, valid)
+    compiled = jax.jit(fold).lower(*args).compile()
+    hlo = compiled.as_text()
+    return {"fold_temp_bytes":
+            int(compiled.memory_analysis().temp_size_in_bytes),
+            "fold_reduce_ops": hlo.count(" reduce(")}
+
+
+def measure(n_devices: int, chunk: int, *, engine: str = "flat",
+            timed_rounds: int = 3) -> Dict:
+    trainer = build_trainer(n_devices, chunk, engine=engine,
+                            timed_rounds=timed_rounds)
     compiled = trainer.lower_round().compile()
     mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
     trainer.run_round()                      # compile + warm the jit cache
     t0 = time.time()
     for _ in range(timed_rounds):
         trainer.run_round()
     us = (time.time() - t0) / timed_rounds * 1e6
-    return {"k": trainer.k_simple + trainer.k_complex, "chunk": chunk,
-            "us_per_round": us,
-            "temp_bytes": int(mem.temp_size_in_bytes),
-            "arg_bytes": int(mem.argument_size_in_bytes)}
+    row = {"k": trainer.k_simple + trainer.k_complex, "chunk": chunk,
+           "engine": engine,
+           "us_per_round": us,
+           "temp_bytes": int(mem.temp_size_in_bytes),
+           "arg_bytes": int(mem.argument_size_in_bytes),
+           "hlo_ops": hlo.count(" = "),
+           "hlo_reduce_ops": hlo.count(" reduce(")}
+    row.update(measure_fold(
+        trainer, chunk if chunk > 0 else max(trainer.k_simple,
+                                             trainer.k_complex)))
+    return row
 
 
 def sweep(timed_rounds: int = 3) -> List[Dict]:
     rows = []
-    for label, n_devices, chunk in SWEEP:
-        r = measure(n_devices, chunk, timed_rounds=timed_rounds)
+    for label, n_devices, chunk, engine in SWEEP:
+        r = measure(n_devices, chunk, engine=engine,
+                    timed_rounds=timed_rounds)
         r["label"] = label
         rows.append(r)
     by = {r["label"]: r for r in rows}
-    # the acceptance comparison: 4x cohort streamed vs seed one-shot peak
-    by["k40_chunk5"]["fits_under_seed_peak"] = (
-        by["k40_chunk5"]["temp_bytes"] <= by["k10_chunk0"]["temp_bytes"])
+    # the PR 2 acceptance comparison: 4x cohort streamed vs seed one-shot
+    flat = by["k40_chunk5"]
+    flat["fits_under_seed_peak"] = (
+        flat["temp_bytes"] <= by["k10_chunk0"]["temp_bytes"])
+    # CI-gated variant with headroom: a broken chunking path blows round
+    # temp up ~4x (see k40_chunk0), while allocator-level jitter across
+    # jax/XLA releases moves it by fractions of a percent — 1.5x separates
+    # the two without making CI track XLA's buffer assignment exactly
+    flat["stream_memory_ok"] = (
+        flat["temp_bytes"] <= 1.5 * by["k10_chunk0"]["temp_bytes"])
+    # the PR 3 acceptance comparison: flat fold vs per-leaf tree fold
+    tree = by["k40_chunk5_tree"]
+    flat["flat_fits_under_tree"] = (flat["fold_temp_bytes"]
+                                    <= tree["fold_temp_bytes"])
+    flat["flat_fewer_reduces"] = (flat["hlo_reduce_ops"]
+                                  < tree["hlo_reduce_ops"])
     return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="1 timed round per point (CI smoke)")
+    ap.add_argument("--out", default="BENCH_streaming.json")
+    args = ap.parse_args(argv)
+
+    rows = sweep(timed_rounds=1 if args.fast else 3)
+    from repro.core import flatten
+    params_abs = jax.eval_shape(LMAdapter(STREAM_CFG).init,
+                                jax.random.PRNGKey(0))
+    payload = {
+        "bench": "streaming_cohort",
+        "backend": jax.default_backend(),
+        "model": STREAM_CFG.name,
+        "n_flat": flatten.build_layout(params_abs, total_multiple=2048).n_flat,
+        "rows": rows,
+    }
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=1)
+    for r in rows:
+        print(f"{r['label']:>16}: {r['us_per_round']:.0f} us/round, "
+              f"round temp {r['temp_bytes'] / 2**20:.2f} MiB, "
+              f"fold temp {r['fold_temp_bytes'] / 2**10:.0f} KiB, "
+              f"{r['hlo_reduce_ops']} reduce ops ({r['engine']})")
+
+    flat = next(r for r in rows if r["label"] == "k40_chunk5")
+    failures = [k for k in ("stream_memory_ok", "flat_fits_under_tree",
+                            "flat_fewer_reduces") if not flat[k]]
+    if failures:
+        print(f"REGRESSION: {failures} (see {args.out})")
+        return 1
+    print(f"ok — wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

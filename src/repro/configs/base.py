@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
-from typing import Optional, Tuple
+from typing import Optional, Tuple, Union
 
 import jax.numpy as jnp
 
@@ -315,7 +315,36 @@ class FedConfig:
     # Streaming cohort engine: train the round's cohort in chunks of this
     # many clients (per population), folding each chunk into running masked
     # aggregation sums — device memory becomes O(cohort_chunk) instead of
-    # O(k).  0 = whole population in one chunk.  Populations whose size the
-    # chunk does not divide are padded with zero-validity clients, so the
-    # aggregate is unchanged (see core/federated.py).
-    cohort_chunk: int = 0
+    # O(k).  0 = whole population in one chunk.  "auto" derives the chunk
+    # from the flat layout's per-client byte footprint vs
+    # ``agg_memory_budget_mb`` (core/flatten.auto_cohort_chunk).  Populations
+    # whose size the chunk does not divide are padded with zero-validity
+    # clients, so the aggregate is unchanged (see core/federated.py).
+    cohort_chunk: Union[int, str] = 0
+    # Aggregation engine: "flat" packs each trained chunk into one
+    # contiguous (Z, n_flat) buffer (core/flatten.py) and folds it with a
+    # single in-place-accumulating masked_agg launch; "tree" is the
+    # per-leaf PR 2 engine (parity reference, one launch per leaf).
+    agg_engine: str = "flat"
+    # masked_agg kernel lane-tile width (multiple of 128) — the ROADMAP
+    # block-size sweep knob; the flat layout's total length is rounded up
+    # to it so the fold needs no call-time padding.
+    agg_block_n: int = 2048
+    # dtype trained chunks stream through the fold in ("bfloat16" halves
+    # the fold's HBM read traffic; accumulation is always f32).
+    agg_stream_dtype: str = "float32"
+    # memory budget targeted by cohort_chunk="auto" (per-client packed
+    # footprint x multiplier x chunk <= this).
+    agg_memory_budget_mb: float = 512.0
+
+    def __post_init__(self):
+        if self.agg_engine not in ("flat", "tree"):
+            raise ValueError(f"unknown agg_engine {self.agg_engine!r}")
+        if self.agg_block_n <= 0 or self.agg_block_n % 128:
+            raise ValueError("agg_block_n must be a positive multiple of 128")
+        if self.agg_stream_dtype not in ("float32", "bfloat16"):
+            raise ValueError(f"agg_stream_dtype must be float32 or "
+                             f"bfloat16, got {self.agg_stream_dtype!r}")
+        if isinstance(self.cohort_chunk, str) and self.cohort_chunk != "auto":
+            raise ValueError(f"cohort_chunk must be an int or 'auto', got "
+                             f"{self.cohort_chunk!r}")

@@ -5,34 +5,52 @@ treedef with a leading cohort axis ``Z``.  Simple clients' complex-only
 slices are carried untouched (they are weighted out by the masks), so one
 stacked representation serves every algorithm.
 
-Two entry points:
+Three entry points:
 
 * One-shot (``fedhen_server_update`` / ``decouple_server_update``): the
-  whole cohort is stacked and reduced at once.  Reference semantics.
-* Streaming (``streaming_init`` / ``streaming_fold`` / ``streaming_finalize``):
-  the cohort arrives in chunks; each chunk is folded into running
-  *unnormalized* masked sums (one accumulator tree selecting inside-M /
-  outside-M weights per element, plus the two weight totals), and the
-  division happens once at ``streaming_finalize``.  This is the contract the
-  round engine's ``lax.scan`` over cohort chunks uses (core/federated.py):
-  server memory is O(chunk), the result matches the one-shot path up to
-  float summation order.
+  whole cohort is stacked and reduced at once.  Reference semantics — the
+  parity oracle every streaming engine is tested against.
+* Flat streaming (``streaming_init`` / ``streaming_fold`` /
+  ``streaming_finalize``) — THE production fold.  ``StreamState`` carries
+  one flat f32 accumulator vector (plus one more for decouple): each
+  trained chunk is packed into a single contiguous ``(Z, n_flat)`` buffer
+  by the trainer's static ``core.flatten.FlatLayout`` and folded with ONE
+  accumulating ``masked_agg`` launch (``input_output_aliases`` updates the
+  running sum in place on TPU), against one precomputed flat mask
+  bitvector.  Chunks may stream in bf16; accumulation is always f32.
+  Unpacking back to the parameter tree happens once, at finalize.
+
+  **Flat layout contract**: the layout's offsets are static per (treedef,
+  leaf shapes, align, block_n) — built once per trainer and valid for
+  every round.  Per-element results match the tree path exactly up to
+  float summation order across kernel tile boundaries (the cohort axis is
+  reduced in the same order per lane).
+* Tree streaming (``tree_streaming_init`` / ``tree_streaming_fold`` /
+  ``tree_streaming_finalize``): the PR 2 per-leaf engine (one
+  ``masked_agg`` launch per leaf), kept as the streaming parity reference
+  and selectable via ``FedConfig.agg_engine="tree"``.
+
+Both streaming engines fold chunks into running *unnormalized* masked sums
+plus two scalar weight totals; the division happens once at finalize, so
+server memory is O(chunk) and the result matches the one-shot path up to
+float summation order.
 
 The hot path — a weighted masked sum over the cohort axis — is exactly the
-``masked_agg`` Pallas kernel's contract; ``streaming_fold`` dispatches to it
-on TPU via ``kernels/masked_agg/ops.py``, with the XLA reference as the CPU
+``masked_agg`` Pallas kernel's contract; the folds dispatch to it on TPU
+via ``kernels/masked_agg/ops.py``, with the XLA reference as the CPU
 fallback (what the dry-run lowers, since Pallas cannot lower on the CPU
 backend).
 """
 
 from __future__ import annotations
 
-from typing import Any, NamedTuple, Optional, Tuple
+import functools
+from typing import Any, Callable, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import masking
+from repro.core import flatten, masking
 from repro.kernels.masked_agg import ops as agg_ops
 
 Tree = Any
@@ -111,25 +129,8 @@ def masked_cohort_mean(cohort: Tree, weights_m: jax.Array,
 
 
 # ---------------------------------------------------------------------------
-# Streaming aggregation (chunked cohorts)
+# Shared streaming helpers
 # ---------------------------------------------------------------------------
-
-class StreamState(NamedTuple):
-    """Running sums of a chunked server aggregation (a jit/scan carry).
-
-    ``acc`` is one f32 tree of *unnormalized* masked sums: inside M each
-    element accumulates ``sum_z w_in[z] * x[z]``, outside M
-    ``sum_z w_out[z] * x[z]`` — exactly one ``masked_agg`` kernel pass per
-    chunk.  ``acc_out`` (decouple only, else ``None``) additionally carries
-    the *full-tree* ``w_out`` sums, because decouple's new complex model is
-    the complex-group mean everywhere, including inside M.  ``tot_in`` /
-    ``tot_out`` are the scalar weight totals the finalize divides by.
-    """
-    acc: Tree
-    acc_out: Optional[Tree]
-    tot_in: jax.Array
-    tot_out: jax.Array
-
 
 def _chunk_weights(is_simple: jax.Array, valid: jax.Array,
                    algorithm: str) -> Tuple[jax.Array, jax.Array]:
@@ -148,12 +149,50 @@ def _chunk_weights(is_simple: jax.Array, valid: jax.Array,
     return w_in, w_out
 
 
-def streaming_init(params_like: Tree, algorithm: str) -> StreamState:
-    """Zero accumulators shaped like one (unstacked) complex model."""
+def _safe_inv(tot: jax.Array) -> jax.Array:
+    """1/tot with the zero-weight-group guard (0 -> 0, never NaN)."""
+    return jnp.where(tot > 0, 1.0 / jnp.maximum(tot, 1e-12), 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Flat streaming aggregation (the production fold)
+# ---------------------------------------------------------------------------
+
+class StreamState(NamedTuple):
+    """Running sums of a chunked server aggregation (a jit/scan carry).
+
+    ``acc`` is ONE flat f32 vector of *unnormalized* masked sums over the
+    trainer's ``FlatLayout``: inside M each element accumulates
+    ``sum_z w_in[z] * x[z]``, outside M ``sum_z w_out[z] * x[z]`` — exactly
+    one accumulating ``masked_agg`` kernel pass per chunk, updated in place.
+    ``acc_out`` (decouple only, else ``None``) additionally carries the
+    *whole-vector* ``w_out`` sums, because decouple's new complex model is
+    the complex-group mean everywhere, including inside M.  ``tot_in`` /
+    ``tot_out`` are the scalar weight totals the finalize divides by.
+    """
+    acc: jax.Array
+    acc_out: Optional[jax.Array]
+    tot_in: jax.Array
+    tot_out: jax.Array
+
+
+def _layout_for(tree: Tree, layout, block_n: int, *, stacked: bool = False):
+    if layout is not None:
+        return layout
+    return flatten.layout_of(tree, total_multiple=block_n, stacked=stacked)
+
+
+def streaming_init(params_like: Tree, algorithm: str, *,
+                   layout: Optional[flatten.FlatLayout] = None,
+                   block_n: int = 2048) -> StreamState:
+    """Zero flat accumulators for one (unstacked) complex model.
+
+    ``layout``/``block_n`` must match the subsequent folds (the trainer
+    passes its one static layout everywhere)."""
     if algorithm not in ALGORITHMS:
         raise ValueError(algorithm)
-    zeros = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32),
-                         params_like)
+    layout = _layout_for(params_like, layout, block_n)
+    zeros = jnp.zeros((layout.n_flat,), jnp.float32)
     acc_out = zeros if algorithm == "decouple" else None
     return StreamState(zeros, acc_out, jnp.zeros((), jnp.float32),
                        jnp.zeros((), jnp.float32))
@@ -161,37 +200,188 @@ def streaming_init(params_like: Tree, algorithm: str) -> StreamState:
 
 def streaming_fold(state: StreamState, chunk: Tree, is_simple: jax.Array,
                    valid: jax.Array, mask: Tree, *, algorithm: str,
+                   layout: Optional[flatten.FlatLayout] = None,
+                   flat_mask: Optional[jax.Array] = None,
+                   block_n: int = 2048,
+                   stream_dtype=jnp.float32,
                    force_pallas_interpret: bool = False) -> StreamState:
-    """Fold one stacked chunk (z, ...) of client models into the sums.
+    """Fold one stacked chunk (z, ...) of client models into the flat sums.
 
-    Invalid (NaN / padding) devices carry weight 0 and are gated before the
-    multiply, so they can never poison the accumulators.  The masked partial
-    sum is one ``masked_agg`` kernel call per leaf on TPU.
+    On the kernel path (TPU, or interpret mode in tests) the chunk is
+    packed into one ``(Z, n_flat)`` buffer (``stream_dtype``; bf16 halves
+    fold HBM traffic, accumulation stays f32) and reduced with ONE
+    ``masked_agg`` launch — two for decouple, whose second accumulator uses
+    ``w_out`` on both mask branches.  The CPU fallback keeps the same flat
+    f32 accumulator but folds leaf by leaf into its slices (static slot
+    offsets), row-streaming the cohort axis — no packed ``(Z, n_flat)``
+    scratch buffer and no reduce op materializes, matching the kernel's
+    summation order exactly.  Invalid (NaN / padding) devices carry weight
+    0 and are gated before the multiply on both paths, so they can never
+    poison the accumulators.
     """
     w_in, w_out = _chunk_weights(is_simple, valid, algorithm)
-    chunk32 = jax.tree.map(lambda x: x.astype(jnp.float32), chunk)
+    layout = _layout_for(chunk, layout, block_n, stacked=True)
+    if force_pallas_interpret or agg_ops.use_pallas():
+        if flat_mask is None:
+            flat_mask = flatten.pack_mask(layout, mask)
+        xz = flatten.pack_stacked(layout, chunk, dtype=stream_dtype)
+        acc = agg_ops.masked_agg_acc_pallas(
+            state.acc, xz, flat_mask, w_in, w_out, block_n=block_n,
+            interpret=force_pallas_interpret)
+        acc_out = state.acc_out
+        if acc_out is not None:
+            acc_out = agg_ops.masked_agg_acc_pallas(
+                acc_out, xz, flat_mask, w_out, w_out, block_n=block_n,
+                interpret=force_pallas_interpret)
+    else:
+        acc = _fold_leaves_into_flat(state.acc, chunk, mask, layout,
+                                     w_in, w_out, stream_dtype)
+        acc_out = state.acc_out
+        if acc_out is not None:
+            acc_out = _fold_leaves_into_flat(acc_out, chunk, mask, layout,
+                                             w_out, w_out, stream_dtype)
+    return StreamState(acc, acc_out, state.tot_in + jnp.sum(w_in),
+                       state.tot_out + jnp.sum(w_out))
+
+
+def _fold_leaves_into_flat(acc: jax.Array, chunk: Tree, mask: Tree,
+                           layout: flatten.FlatLayout, w_m: jax.Array,
+                           w_rest: jax.Array, stream_dtype) -> jax.Array:
+    """CPU lowering of the flat fold: per-leaf gated sums accumulated into
+    the flat accumulator's static slices (in-place dynamic-update-slices),
+    without materializing the packed ``(Z, n_flat)`` buffer."""
+    for x, m, slot in zip(jax.tree.leaves(chunk), jax.tree.leaves(mask),
+                          layout.slots):
+        z = x.shape[0]
+        body = x.reshape(z, -1).astype(stream_dtype)
+        m_flat = jnp.broadcast_to(jnp.asarray(m), x.shape[1:]).reshape(-1)
+        seg = jax.lax.dynamic_slice_in_dim(acc, slot.offset, slot.size)
+        seg = agg_ops.masked_agg_acc_ref(seg, body, m_flat, w_m, w_rest)
+        acc = jax.lax.dynamic_update_slice_in_dim(acc, seg, slot.offset, 0)
+    return acc
+
+
+def streaming_finalize(state: StreamState, mask: Tree, template: Tree, *,
+                       algorithm: str,
+                       layout: Optional[flatten.FlatLayout] = None,
+                       flat_mask: Optional[jax.Array] = None,
+                       block_n: int = 2048) -> Tuple[Tree, Optional[Tree]]:
+    """Normalize the flat sums, unpack to trees, cast to ``template`` dtypes.
+
+    Returns ``(new_complex, new_simple_host)``; the host is ``None`` except
+    for decouple (matching ``ServerState``).  A group with zero total weight
+    yields zeros, like ``_norm_weights`` in the one-shot path.
+    """
+    layout = _layout_for(template, layout, block_n)
+    if flat_mask is None:
+        flat_mask = flatten.pack_mask(layout, mask)
+    inv_in, inv_out = _safe_inv(state.tot_in), _safe_inv(state.tot_out)
+    cast = lambda tree: jax.tree.map(
+        lambda a, t: a.astype(t.dtype), tree, template)
+    combined_flat = state.acc * jnp.where(flat_mask, inv_in, inv_out)
+    combined = cast(flatten.unpack(layout, combined_flat, cast=False))
+    if algorithm == "decouple":
+        new_complex = cast(flatten.unpack(layout, state.acc_out * inv_out,
+                                          cast=False))
+        return new_complex, combined
+    return combined, None
+
+
+def make_engine(engine: str, *, algorithm: str, mask: Tree,
+                layout: Optional[flatten.FlatLayout] = None,
+                flat_mask: Optional[jax.Array] = None,
+                block_n: int = 2048, stream_dtype=jnp.float32
+                ) -> Tuple[Callable, Callable, Callable]:
+    """The ``(init, fold, finalize)`` triple for a fold engine.
+
+    The single dispatch point every consumer (the trainer's round, the
+    launch-side round step, benchmarks) binds its engine through, so the
+    flat/tree plumbing cannot drift between call sites:
+
+    * ``init(params_like) -> state``
+    * ``fold(state, chunk, is_simple, valid) -> state``
+    * ``finalize(state, template=...) -> (new_complex, simple_host)``
+    """
+    if engine == "flat":
+        init = functools.partial(streaming_init, algorithm=algorithm,
+                                 layout=layout, block_n=block_n)
+        fold = functools.partial(streaming_fold, mask=mask,
+                                 algorithm=algorithm, layout=layout,
+                                 flat_mask=flat_mask, block_n=block_n,
+                                 stream_dtype=stream_dtype)
+        finalize = functools.partial(streaming_finalize, mask=mask,
+                                     algorithm=algorithm, layout=layout,
+                                     flat_mask=flat_mask, block_n=block_n)
+    elif engine == "tree":
+        init = functools.partial(tree_streaming_init, algorithm=algorithm)
+        fold = functools.partial(tree_streaming_fold, mask=mask,
+                                 algorithm=algorithm, block_n=block_n,
+                                 stream_dtype=stream_dtype)
+        finalize = functools.partial(tree_streaming_finalize, mask=mask,
+                                     algorithm=algorithm)
+    else:
+        raise ValueError(f"unknown agg engine {engine!r}")
+    return init, fold, finalize
+
+
+# ---------------------------------------------------------------------------
+# Tree streaming aggregation (PR 2 per-leaf engine — parity reference)
+# ---------------------------------------------------------------------------
+
+class TreeStreamState(NamedTuple):
+    """Per-leaf analogue of ``StreamState``: ``acc``/``acc_out`` are f32
+    *trees* shaped like one complex model (one ``masked_agg`` launch per
+    leaf at fold time)."""
+    acc: Tree
+    acc_out: Optional[Tree]
+    tot_in: jax.Array
+    tot_out: jax.Array
+
+
+def tree_streaming_init(params_like: Tree, algorithm: str) -> TreeStreamState:
+    """Zero accumulators shaped like one (unstacked) complex model."""
+    if algorithm not in ALGORITHMS:
+        raise ValueError(algorithm)
+    zeros = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32),
+                         params_like)
+    acc_out = zeros if algorithm == "decouple" else None
+    return TreeStreamState(zeros, acc_out, jnp.zeros((), jnp.float32),
+                           jnp.zeros((), jnp.float32))
+
+
+def tree_streaming_fold(state: TreeStreamState, chunk: Tree,
+                        is_simple: jax.Array, valid: jax.Array, mask: Tree,
+                        *, algorithm: str, block_n: int = 2048,
+                        stream_dtype=jnp.float32,
+                        force_pallas_interpret: bool = False
+                        ) -> TreeStreamState:
+    """Fold one stacked chunk into per-leaf sums: one ``masked_agg`` kernel
+    call per leaf on TPU (the pre-flat engine, kept for parity).
+
+    ``stream_dtype`` mirrors the flat fold's streaming precision: inputs
+    are rounded to it before the f32 accumulation, so a flat-vs-tree
+    comparison at bf16 compares like with like."""
+    w_in, w_out = _chunk_weights(is_simple, valid, algorithm)
+    chunk32 = jax.tree.map(
+        lambda x: x.astype(stream_dtype).astype(jnp.float32), chunk)
     part = agg_ops.masked_agg_tree(
-        chunk32, mask, w_in, w_out,
+        chunk32, mask, w_in, w_out, block_n=block_n,
         force_pallas_interpret=force_pallas_interpret)
     acc = jax.tree.map(jnp.add, state.acc, part)
     acc_out = state.acc_out
     if acc_out is not None:
         acc_out = jax.tree.map(
             lambda a, x: a + _gated_wsum_leaf(x, w_out), acc_out, chunk32)
-    return StreamState(acc, acc_out, state.tot_in + jnp.sum(w_in),
-                       state.tot_out + jnp.sum(w_out))
+    return TreeStreamState(acc, acc_out, state.tot_in + jnp.sum(w_in),
+                           state.tot_out + jnp.sum(w_out))
 
 
-def streaming_finalize(state: StreamState, mask: Tree, template: Tree, *,
-                       algorithm: str) -> Tuple[Tree, Optional[Tree]]:
-    """Normalize the sums into server models, cast to ``template`` dtypes.
-
-    Returns ``(new_complex, new_simple_host)``; the host is ``None`` except
-    for decouple (matching ``ServerState``).  A group with zero total weight
-    yields zeros, like ``_norm_weights`` in the one-shot path.
-    """
+def tree_streaming_finalize(state: TreeStreamState, mask: Tree,
+                            template: Tree, *, algorithm: str
+                            ) -> Tuple[Tree, Optional[Tree]]:
+    """Normalize the per-leaf sums into server models (tree engine)."""
     def safe_div(tree, tot):
-        inv = jnp.where(tot > 0, 1.0 / jnp.maximum(tot, 1e-12), 0.0)
+        inv = _safe_inv(tot)
         return jax.tree.map(lambda a: a * inv, tree)
 
     mean_in = safe_div(state.acc, state.tot_in)

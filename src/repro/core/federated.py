@@ -18,13 +18,30 @@ contract) that are normalized once at the end of the round
 (``aggregate.streaming_finalize``).  Device memory is therefore O(chunk),
 not O(k) — cohorts of hundreds of clients stream through a fixed-size
 working set.  ``cohort_chunk=0`` trains each population in a single chunk
-(the old whole-cohort vmap).  Populations the chunk size does not divide are
-padded with zero-validity clients (wrapped data, weight 0), so padding can
-never change the aggregate; per-client RNG keys are derived by
-``fold_in(population_key, client_index)``, so the round's result is
-invariant to the chunking up to float summation order.  On the production
-mesh the chunk axis is sharded over ``data``/``pod`` (see launch/), making
-the per-chunk fold an all-reduce: the communication the paper saves.
+(the old whole-cohort vmap); ``cohort_chunk="auto"`` derives the chunk from
+the flat layout's per-client byte footprint against
+``FedConfig.agg_memory_budget_mb`` (``flatten.auto_cohort_chunk`` — the
+resolved value is ``FederatedTrainer.cohort_chunk``).  Populations the
+chunk size does not divide are padded with zero-validity clients (wrapped
+data, weight 0), so padding can never change the aggregate; per-client RNG
+keys are derived by ``fold_in(population_key, client_index)``, so the
+round's result is invariant to the chunking up to float summation order.
+On the production mesh the chunk axis is sharded over ``data``/``pod``
+(see launch/), making the per-chunk fold an all-reduce: the communication
+the paper saves.
+
+**Flat layout contract.**  With ``FedConfig.agg_engine="flat"`` (default)
+the trainer builds ONE static ``core.flatten.FlatLayout`` for the complex
+treedef at ``__init__`` (offsets are a pure function of treedef + leaf
+shapes + ``agg_block_n``, so the layout is valid for every round and
+checkpoint restore) and precomputes the index-set-M mask as one flat
+bitvector.  Each trained chunk is packed into a single contiguous
+``(Z, n_flat)`` buffer — in ``agg_stream_dtype`` (bf16 halves fold read
+traffic; accumulation is always f32) — and the whole fold is ONE
+accumulating ``masked_agg`` launch updating the flat running sum in place,
+instead of one launch per leaf.  ``agg_engine="tree"`` keeps the per-leaf
+PR 2 fold as the parity engine; the two differ only by float summation
+order across kernel tile boundaries.
 
 Cohort composition is stratified (k_s simple + k_c complex per round, the
 expectation of the paper's uniform 10% sampling) so shapes stay static;
@@ -43,7 +60,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import FedConfig
-from repro.core import aggregate, masking
+from repro.core import aggregate, flatten, masking
 from repro.optim.sgd import sgd_update
 
 Tree = Any
@@ -136,6 +153,12 @@ class FederatedTrainer:
         self.k_simple = max(int(round(fed.participation * fed.n_simple)), 1)
         n_complex = fed.n_devices - fed.n_simple
         self.k_complex = max(int(round(fed.participation * n_complex)), 1)
+        # flat aggregation layout: built ONCE — offsets are static per
+        # (treedef, leaf shapes, agg_block_n), valid for every round
+        self.layout = flatten.build_layout(self.server.complex,
+                                           total_multiple=fed.agg_block_n)
+        self.flat_mask = flatten.pack_mask(self.layout, self.mask)
+        self.cohort_chunk = self._resolve_cohort_chunk()
         self.bytes_per_round = self._bytes_per_round()
         self.total_bytes = 0.0
         # donate the server state buffers into the round (they are replaced
@@ -143,6 +166,20 @@ class FederatedTrainer:
         donate = (0, 1) if jax.default_backend() != "cpu" else ()
         self._round_fn = jax.jit(self._make_round_fn(),
                                  donate_argnums=donate)
+
+    # -- chunk-size autotuning (ROADMAP item) --------------------------------
+
+    def _resolve_cohort_chunk(self) -> int:
+        """``cohort_chunk="auto"`` -> largest chunk whose per-client packed
+        footprint fits ``agg_memory_budget_mb`` (else the configured int)."""
+        fed = self.fed
+        if fed.cohort_chunk == "auto":
+            return flatten.auto_cohort_chunk(
+                self.layout,
+                budget_bytes=fed.agg_memory_budget_mb * 2**20,
+                k=max(self.k_simple, self.k_complex),
+                stream_dtype=jnp.dtype(fed.agg_stream_dtype))
+        return int(fed.cohort_chunk)
 
     # -- communication accounting ------------------------------------------
 
@@ -168,19 +205,33 @@ class FederatedTrainer:
                         else adapter.loss_complex)
         train_complex = make_client_trainer(complex_loss, fed)
 
+        layout = self.layout
+        stream_dtype = jnp.dtype(fed.agg_stream_dtype)
+
+        def make_agg(flat_mask):
+            """Engine dispatch.  ``flat_mask`` is a round *argument* (not a
+            closed-over constant) so the precomputed bitvector lives in
+            argument memory, shared across rounds, instead of being baked
+            into the executable's temp allocation."""
+            return aggregate.make_engine(
+                fed.agg_engine, algorithm=algo, mask=mask, layout=layout,
+                flat_mask=flat_mask, block_n=fed.agg_block_n,
+                stream_dtype=stream_dtype)
+
         def tile(tree, k):
             return jax.tree.map(
                 lambda x: jnp.broadcast_to(x[None], (k,) + x.shape), tree)
 
-        def stream_population(state, src_params, train_fn, data, key, *,
-                              k: int, is_simple_flag: bool):
+        def stream_population(state, src_params, train_fn, data, key,
+                              agg_fold, *, k: int, is_simple_flag: bool):
             """scan over chunks: train + fold into the running sums.
 
             Pads k up to a chunk multiple with zero-validity clients
             (wrapped data) so shapes stay static; padding never reaches the
             aggregate or the loss metric.
             """
-            chunk = k if fed.cohort_chunk <= 0 else min(fed.cohort_chunk, k)
+            chunk = (k if self.cohort_chunk <= 0
+                     else min(self.cohort_chunk, k))
             k_pad = -(-k // chunk) * chunk
             n_chunks = k_pad // chunk
             if k_pad != k:
@@ -203,8 +254,7 @@ class FederatedTrainer:
                 valid = real_i
                 if fed.skip_nan_devices:
                     valid = valid & jax.vmap(masking.tree_isfinite)(trained)
-                state = aggregate.streaming_fold(
-                    state, trained, is_simple, valid, mask, algorithm=algo)
+                state = agg_fold(state, trained, is_simple, valid)
                 loss_sum = loss_sum + jnp.sum(jnp.where(real_i, losses, 0.0))
                 valid_sum = valid_sum + jnp.sum(valid)
                 return (state, loss_sum, valid_sum), None
@@ -215,18 +265,20 @@ class FederatedTrainer:
             return state, loss_sum / k, valid_sum
 
         def round_fn(complex_params: Tree, simple_host: Optional[Tree],
-                     data_s: Batch, data_c: Batch, rng: jax.Array):
+                     data_s: Batch, data_c: Batch, rng: jax.Array,
+                     flat_mask: Optional[jax.Array]):
+            agg_init, agg_fold, agg_finalize = make_agg(flat_mask)
             rs, rc = jax.random.split(rng)
             src_simple = simple_host if algo == "decouple" else complex_params
-            state = aggregate.streaming_init(complex_params, algo)
+            state = agg_init(complex_params)
             state, loss_s, valid_s = stream_population(
-                state, src_simple, train_simple, data_s, rs,
+                state, src_simple, train_simple, data_s, rs, agg_fold,
                 k=self.k_simple, is_simple_flag=True)
             state, loss_c, valid_c = stream_population(
-                state, complex_params, train_complex, data_c, rc,
+                state, complex_params, train_complex, data_c, rc, agg_fold,
                 k=self.k_complex, is_simple_flag=False)
-            new_complex, new_simple_host = aggregate.streaming_finalize(
-                state, mask, complex_params, algorithm=algo)
+            new_complex, new_simple_host = agg_finalize(
+                state, template=complex_params)
             metrics = {"loss_simple": loss_s,
                        "loss_complex": loss_c,
                        "n_valid": valid_s + valid_c}
@@ -250,6 +302,12 @@ class FederatedTrainer:
 
     # -- public API ----------------------------------------------------------
 
+    def _flat_mask_arg(self) -> Optional[jax.Array]:
+        """The precomputed flat bitvector, passed into the round jit as an
+        argument (a resident buffer shared by every round) rather than
+        closed over as an executable constant."""
+        return self.flat_mask if self.fed.agg_engine == "flat" else None
+
     def lower_round(self):
         """AOT-lower the jitted round with this trainer's shapes.
 
@@ -261,7 +319,8 @@ class FederatedTrainer:
         key = jax.random.PRNGKey(self.fed.seed * 100003 + self.server.round)
         return self._round_fn.lower(
             self.server.complex, self.server.simple_host,
-            self._gather(simple_ids), self._gather(complex_ids), key)
+            self._gather(simple_ids), self._gather(complex_ids), key,
+            self._flat_mask_arg())
 
     def run_round(self) -> Dict[str, float]:
         simple_ids, complex_ids = self._sample_cohort()
@@ -269,7 +328,8 @@ class FederatedTrainer:
         data_c = self._gather(complex_ids)
         key = jax.random.PRNGKey(self.fed.seed * 100003 + self.server.round)
         new_complex, new_simple_host, metrics = self._round_fn(
-            self.server.complex, self.server.simple_host, data_s, data_c, key)
+            self.server.complex, self.server.simple_host, data_s, data_c,
+            key, self._flat_mask_arg())
         self.server = ServerState(complex=new_complex,
                                   simple_host=new_simple_host,
                                   round=self.server.round + 1)

@@ -1,0 +1,210 @@
+"""Static flat-buffer packing layout for the aggregation hot path.
+
+The FedHeN server fold is a masked reduction over *every* parameter of a
+cohort chunk — the pytree structure is irrelevant to the math.  PR 2's
+streaming engine still paid the tree tax: one ``masked_agg`` launch per
+leaf (~dozens per fold), per-leaf ``block_n`` padding waste on small
+bias/norm leaves, and a mask re-broadcast inside every scan iteration.
+
+``FlatLayout`` removes all of it.  It is computed **once per trainer** from
+the complex model's treedef + leaf shapes (all static), and assigns every
+leaf a contiguous, lane-aligned slice of one flat vector:
+
+* ``pack_stacked`` packs a trained chunk (Z stacked client models) into a
+  single ``(Z, n_flat)`` buffer — padding regions are zero, so they can
+  never contribute to a weighted sum;
+* ``pack_mask`` lowers the index-set-M mask tree to one precomputed flat
+  bitvector (padding = False — irrelevant, the padded inputs are zero);
+* ``unpack`` restores the original tree from a flat vector at finalize.
+
+The layout contract: offsets are a pure function of (treedef, leaf shapes,
+align, total_multiple), so a layout built at ``__init__`` stays valid for
+every round, checkpoint restore, and donated buffer of that trainer.
+Summation order over the cohort axis is unchanged (the kernel reduces Z
+identically per lane); summation *within* a leaf never happens, so flat
+vs tree results differ only by float non-associativity across kernel tile
+boundaries — in practice bit-identical per element.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Tree = Any
+
+LANES = 128  # TPU lane width: per-leaf alignment keeps every slice tiled
+
+
+class LeafSlot(NamedTuple):
+    """Where one leaf lives inside the flat buffer (all static ints)."""
+    offset: int          # start element in the flat vector
+    size: int            # true element count (prod(shape))
+    padded: int          # size rounded up to the lane alignment
+    shape: Tuple[int, ...]
+    dtype: Any           # jnp dtype of the source leaf
+
+
+@dataclasses.dataclass(frozen=True)
+class FlatLayout:
+    """Static packing plan: one slot per leaf, lane-aligned, fixed total."""
+    treedef: Any
+    slots: Tuple[LeafSlot, ...]
+    n_flat: int          # total flat length (multiple of ``total_multiple``)
+    align: int
+    total_multiple: int
+
+    @property
+    def n_leaves(self) -> int:
+        return len(self.slots)
+
+    @property
+    def n_params(self) -> int:
+        """True parameter count (excludes alignment padding)."""
+        return sum(s.size for s in self.slots)
+
+    def stream_bytes(self, dtype=jnp.float32) -> int:
+        """Bytes one packed client occupies at the given stream dtype."""
+        return self.n_flat * jnp.dtype(dtype).itemsize
+
+
+def _round_up(n: int, m: int) -> int:
+    return -(-n // m) * m if m > 1 else n
+
+
+def build_layout(tree: Tree, *, align: int = LANES,
+                 total_multiple: int = 0) -> FlatLayout:
+    """Assign every leaf of ``tree`` an aligned slice of one flat vector.
+
+    ``total_multiple`` additionally rounds the total length up (use the
+    kernel's ``block_n``) so the packed buffer needs no call-time padding
+    and the accumulator can alias in place.
+    """
+    leaves, treedef = jax.tree.flatten(tree)
+    slots = []
+    offset = 0
+    for x in leaves:
+        size = 1
+        for d in x.shape:
+            size *= d
+        padded = _round_up(size, align)
+        slots.append(LeafSlot(offset, size, padded, tuple(x.shape), x.dtype))
+        offset += padded
+    n_flat = _round_up(offset, max(total_multiple, 1))
+    n_flat = max(n_flat, max(total_multiple, align, 1))
+    return FlatLayout(treedef=treedef, slots=tuple(slots), n_flat=n_flat,
+                      align=align, total_multiple=total_multiple)
+
+
+_LAYOUT_CACHE: Dict[Any, FlatLayout] = {}
+
+
+def layout_of(tree: Tree, *, align: int = LANES,
+              total_multiple: int = 0, stacked: bool = False) -> FlatLayout:
+    """Cached ``build_layout`` keyed on the static (treedef, shapes) sig.
+
+    ``stacked=True`` strips the leading cohort axis from every leaf first
+    (build a layout for one client from a stacked chunk)."""
+    leaves, treedef = jax.tree.flatten(tree)
+    if stacked:
+        leaves = [jax.ShapeDtypeStruct(x.shape[1:], x.dtype) for x in leaves]
+        tree = jax.tree.unflatten(treedef, leaves)
+    key = (treedef, tuple((x.shape, str(jnp.dtype(x.dtype))) for x in leaves),
+           align, total_multiple)
+    hit = _LAYOUT_CACHE.get(key)
+    if hit is None:
+        hit = build_layout(tree, align=align, total_multiple=total_multiple)
+        _LAYOUT_CACHE[key] = hit
+    return hit
+
+
+# ---------------------------------------------------------------------------
+# Pack / unpack
+# ---------------------------------------------------------------------------
+
+def pack_stacked(layout: FlatLayout, tree: Tree, *,
+                 dtype=jnp.float32) -> jax.Array:
+    """Stacked tree (leaves ``(Z, *shape)``) -> one ``(Z, n_flat)`` buffer.
+
+    Alignment padding is zero-filled, so padded lanes contribute exactly 0
+    to any weighted sum over the buffer.
+    """
+    leaves = jax.tree.flatten(tree)[0]
+    z = leaves[0].shape[0]
+    parts = []
+    for x, slot in zip(leaves, layout.slots):
+        body = x.reshape(z, slot.size).astype(dtype)
+        if slot.padded != slot.size:
+            body = jnp.pad(body, ((0, 0), (0, slot.padded - slot.size)))
+        parts.append(body)
+    used = sum(s.padded for s in layout.slots)
+    if layout.n_flat != used:
+        parts.append(jnp.zeros((z, layout.n_flat - used), dtype))
+    return jnp.concatenate(parts, axis=1)
+
+
+def pack(layout: FlatLayout, tree: Tree, *, dtype=jnp.float32) -> jax.Array:
+    """Unstacked tree -> one ``(n_flat,)`` vector (zero-padded slices)."""
+    stacked = jax.tree.map(lambda x: x[None], tree)
+    return pack_stacked(layout, stacked, dtype=dtype)[0]
+
+
+def unpack(layout: FlatLayout, flat: jax.Array, *, cast: bool = True) -> Tree:
+    """``(n_flat,)`` vector -> tree with the layout's shapes (and dtypes
+    when ``cast``)."""
+    leaves = []
+    for slot in layout.slots:
+        x = jax.lax.dynamic_slice_in_dim(flat, slot.offset, slot.size)
+        x = x.reshape(slot.shape)
+        leaves.append(x.astype(slot.dtype) if cast else x)
+    return jax.tree.unflatten(layout.treedef, leaves)
+
+
+def pack_mask(layout: FlatLayout, mask_tree: Tree) -> jax.Array:
+    """Mask tree (leaves broadcastable per layout slot) -> ``(n_flat,)``
+    bool bitvector.  Padding lanes are False; since packed inputs are zero
+    there, the choice cannot affect the aggregate."""
+    leaves = jax.tree.flatten(mask_tree)[0]
+    parts = []
+    for m, slot in zip(leaves, layout.slots):
+        flat = jnp.broadcast_to(jnp.asarray(m), slot.shape).reshape(-1)
+        if slot.padded != slot.size:
+            flat = jnp.pad(flat, (0, slot.padded - slot.size))
+        parts.append(flat)
+    used = sum(s.padded for s in layout.slots)
+    if layout.n_flat != used:
+        parts.append(jnp.zeros((layout.n_flat - used,), bool))
+    return jnp.concatenate(parts)
+
+
+# ---------------------------------------------------------------------------
+# Memory-budget chunk heuristic (ROADMAP: chunk-size autotuning)
+# ---------------------------------------------------------------------------
+
+# A training client's round working set is roughly this many copies of its
+# packed parameter vector: params + grads + SGD update temps + activation
+# slack — all in f32 regardless of the fold's streaming dtype — plus ONE
+# fold/stream buffer copy that does scale with ``agg_stream_dtype``.
+# Deliberately conservative; the budget knob
+# (FedConfig.agg_memory_budget_mb) is the tuning surface.
+CLIENT_FOOTPRINT_MULTIPLIER = 6.0
+
+
+def auto_cohort_chunk(layout: FlatLayout, *, budget_bytes: float, k: int,
+                      stream_dtype=jnp.float32,
+                      multiplier: float = CLIENT_FOOTPRINT_MULTIPLIER) -> int:
+    """Largest chunk whose per-client footprint x chunk fits the budget.
+
+    ``chunk = clamp(budget / per_client, 1, k)`` — the ROADMAP autotuning
+    rule: per-client footprint x chunk <= HBM headroom.  Only the one
+    stream-buffer copy shrinks with a narrower ``stream_dtype``; the other
+    ``multiplier - 1`` copies (params, grads, update temps, activations)
+    stay f32, so bf16 streaming must not halve the whole estimate.
+    """
+    per_client = (layout.stream_bytes(jnp.float32) * (multiplier - 1.0)
+                  + layout.stream_bytes(stream_dtype))
+    chunk = int(budget_bytes // max(per_client, 1.0))
+    return max(1, min(chunk, max(k, 1)))

@@ -12,13 +12,24 @@ cohort through VMEM exactly once with lane-aligned tiles:
   reduced over Z in one fused multiply-add in f32, written back in the
   storage dtype.
 
+Two variants:
+
+* ``masked_agg_pallas`` — the one-shot reduction (out = masked sum).
+* ``masked_agg_acc_pallas`` — the streaming fold's accumulating form:
+  ``out = acc + masked sum`` with ``input_output_aliases`` so the running
+  f32 accumulator is updated **in place** — the fold writes N floats
+  instead of reading+writing two accumulator copies, halving accumulator
+  HBM traffic.  Inputs may be bf16; accumulation is always f32.
+
+Neither wrapper is ``jax.jit``-ed: both always run inside the already
+jitted round (or a jitted test harness), where an extra jit would only add
+eager-dispatch overhead and a second compilation cache.
+
 VMEM budget: Z=32, block_n=2048, bf16 -> 128 KiB per input tile plus the
-mask/out tiles; well under the ~16 MiB/core VMEM on v5e.
+mask/acc/out tiles; well under the ~16 MiB/core VMEM on v5e.
 """
 
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -36,7 +47,6 @@ def _agg_kernel(x_ref, mask_ref, wm_ref, wr_ref, out_ref):
                            keepdims=True).astype(out_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
 def masked_agg_pallas(x: jax.Array, mask: jax.Array, w_m: jax.Array,
                       w_rest: jax.Array, *, block_n: int = 2048,
                       interpret: bool = False) -> jax.Array:
@@ -62,4 +72,53 @@ def masked_agg_pallas(x: jax.Array, mask: jax.Array, w_m: jax.Array,
         out_shape=jax.ShapeDtypeStruct((1, np_), x.dtype),
         interpret=interpret,
     )(x, mask[None, :], w_m[:, None], w_rest[:, None])
+    return out[0, :n]
+
+
+def _agg_acc_kernel(acc_ref, x_ref, mask_ref, wm_ref, wr_ref, out_ref):
+    x = x_ref[...].astype(jnp.float32)              # (Z, block_n)
+    w = jnp.where(mask_ref[...],
+                  wm_ref[...].astype(jnp.float32),
+                  wr_ref[...].astype(jnp.float32))  # (Z, block_n)
+    x = jnp.where(w > 0, x, 0.0)                    # NaN-device gating
+    out_ref[...] = acc_ref[...] + jnp.sum(x * w, axis=0, keepdims=True)
+
+
+def masked_agg_acc_pallas(acc: jax.Array, x: jax.Array, mask: jax.Array,
+                          w_m: jax.Array, w_rest: jax.Array, *,
+                          block_n: int = 2048,
+                          interpret: bool = False) -> jax.Array:
+    """Accumulating fold: acc (N,) f32 + masked sum of x (Z, N) -> (N,) f32.
+
+    ``acc`` is aliased to the output (in-place update).  x may be any
+    float dtype (bf16 streaming); the accumulation is f32.  N should be a
+    multiple of ``block_n`` (the flat layout guarantees it); other sizes
+    are padded, which costs the alias a copy.
+    """
+    if acc.dtype != jnp.float32:
+        raise ValueError(f"accumulator must be f32, got {acc.dtype}")
+    z, n = x.shape
+    pad = (-n) % block_n
+    if pad:
+        acc = jnp.pad(acc, (0, pad))
+        x = jnp.pad(x, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, (0, pad))
+    np_ = x.shape[1]
+    grid = (np_ // block_n,)
+
+    out = pl.pallas_call(
+        _agg_acc_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_n), lambda i: (0, i)),
+            pl.BlockSpec((z, block_n), lambda i: (0, i)),
+            pl.BlockSpec((1, block_n), lambda i: (0, i)),
+            pl.BlockSpec((z, 1), lambda i: (0, 0)),
+            pl.BlockSpec((z, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_n), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, np_), jnp.float32),
+        input_output_aliases={0: 0},
+        interpret=interpret,
+    )(acc[None, :], x, mask[None, :], w_m[:, None], w_rest[:, None])
     return out[0, :n]

@@ -1,14 +1,19 @@
-"""Jit'd wrapper: masked cohort aggregation over parameter pytrees.
+"""Masked cohort aggregation over parameter pytrees + backend dispatch.
 
-This is the server hot path: ``core.aggregate.streaming_fold`` calls
-``masked_agg_tree`` once per cohort chunk with *raw* (unnormalized) weights,
-accumulating partial sums that are divided once per round — so each client
-model leaf streams through the kernel exactly once regardless of chunking.
+The server hot path: ``core.aggregate.streaming_fold`` owns the flat
+engine's dispatch — on the kernel path it packs each chunk into one
+contiguous ``(Z, n_flat)`` buffer and calls ``masked_agg_acc_pallas``
+(re-exported here) with *raw* unnormalized weights, accumulating into one
+flat f32 running sum divided once per round: one launch per fold, updated
+in place via ``input_output_aliases``; on CPU it folds per leaf directly
+into the flat accumulator's slices.  ``masked_agg_tree`` below keeps the
+PR 2 per-leaf path (one launch per leaf) as the parity engine.
 
-Backend selection: the Pallas kernel targets TPU; on CPU (this container)
-the XLA reference path runs instead — set ``force_pallas_interpret=True``
-to exercise the kernel body in interpret mode (tests do), or
-``REPRO_MASKED_AGG=ref|pallas`` to override the automatic choice.
+Backend selection (``use_pallas``): the Pallas kernel targets TPU; on CPU
+(this container) the XLA reference path runs instead — set
+``force_pallas_interpret=True`` to exercise the kernel body in interpret
+mode (tests do), or ``REPRO_MASKED_AGG=ref|pallas`` to override the
+automatic choice.
 """
 
 from __future__ import annotations
@@ -19,13 +24,15 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.masked_agg.kernel import masked_agg_pallas
-from repro.kernels.masked_agg.ref import masked_agg_ref
+from repro.kernels.masked_agg.kernel import (masked_agg_acc_pallas,
+                                             masked_agg_pallas)
+from repro.kernels.masked_agg.ref import masked_agg_acc_ref, masked_agg_ref
 
 Tree = Any
 
 
-def _use_pallas() -> bool:
+def use_pallas() -> bool:
+    """True when the Pallas kernel (not the XLA reference) should run."""
     override = os.environ.get("REPRO_MASKED_AGG", "")
     if override in ("ref", "pallas"):
         return override == "pallas"
@@ -33,7 +40,7 @@ def _use_pallas() -> bool:
 
 
 def masked_agg_leaf(x: jax.Array, mask: jax.Array, w_m: jax.Array,
-                    w_rest: jax.Array, *,
+                    w_rest: jax.Array, *, block_n: int = 2048,
                     force_pallas_interpret: bool = False) -> jax.Array:
     """One stacked leaf: x (Z, ...) + broadcastable mask -> aggregated (…)."""
     z = x.shape[0]
@@ -42,9 +49,11 @@ def masked_agg_leaf(x: jax.Array, mask: jax.Array, w_m: jax.Array,
     mask_flat = jnp.broadcast_to(jnp.asarray(mask),
                                  x.shape[1:]).reshape(-1)
     if force_pallas_interpret:
-        out = masked_agg_pallas(body, mask_flat, w_m, w_rest, interpret=True)
-    elif _use_pallas():
-        out = masked_agg_pallas(body, mask_flat, w_m, w_rest)
+        out = masked_agg_pallas(body, mask_flat, w_m, w_rest,
+                                block_n=block_n, interpret=True)
+    elif use_pallas():
+        out = masked_agg_pallas(body, mask_flat, w_m, w_rest,
+                                block_n=block_n)
     else:
         out = masked_agg_ref(body, mask_flat, w_m, w_rest)
     return out.reshape(x.shape[1:])
@@ -52,7 +61,7 @@ def masked_agg_leaf(x: jax.Array, mask: jax.Array, w_m: jax.Array,
 
 def masked_agg_tree(cohort: Tree, mask_tree: Tree, w_m: jax.Array,
                     w_rest: jax.Array, **kw) -> Tree:
-    """Apply the aggregation across a stacked cohort pytree.
+    """Apply the aggregation across a stacked cohort pytree (per leaf).
 
     Weights are RAW per-client coefficients (a weighted *sum*, not a
     mean): the streaming server step passes unnormalized validity weights

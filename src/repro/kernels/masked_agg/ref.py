@@ -23,3 +23,24 @@ def masked_agg_ref(x: jnp.ndarray, mask: jnp.ndarray, w_m: jnp.ndarray,
     w = jnp.where(mask[None, :], w_m[:, None], w_rest[:, None])
     xf = jnp.where(w > 0, xf, 0.0)
     return jnp.sum(xf * w, axis=0).astype(x.dtype)
+
+
+def masked_agg_acc_ref(acc: jnp.ndarray, x: jnp.ndarray, mask: jnp.ndarray,
+                       w_m: jnp.ndarray, w_rest: jnp.ndarray) -> jnp.ndarray:
+    """Accumulating form: acc (N,) f32 + masked sum of x (Z, N) -> f32.
+
+    x may be bf16 (streaming dtype); the sum and the accumulator stay f32
+    — this is the oracle for ``masked_agg_acc_pallas``.
+
+    The cohort axis is accumulated row by row (Z is static and small —
+    the chunk size), mirroring how the kernel streams tiles: every term is
+    an elementwise ``(N,)`` chain XLA fuses outright, so the CPU path never
+    materializes a ``(Z, N)`` product the way a one-shot ``reduce`` over a
+    packed buffer would — and slice-of-concatenate simplification deletes
+    the packed buffer itself."""
+    out = acc
+    for z in range(x.shape[0]):
+        wz = jnp.where(mask, w_m[z], w_rest[z]).astype(jnp.float32)
+        xz = jnp.where(wz > 0, x[z].astype(jnp.float32), 0.0)
+        out = out + xz * wz
+    return out

@@ -30,6 +30,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import configs
+from repro.core import flatten, masking
 from repro.launch import sharding
 from repro.launch.mesh import make_production_mesh
 from repro.launch.steps import make_fed_round_step
@@ -37,11 +38,17 @@ from repro.models import transformer as tfm
 from repro.roofline import analysis, hlo_walk
 
 
+# one block size for BOTH the step's internal layout and the externally
+# built flat_mask below — they must agree for the kernel path
+AGG_BLOCK_N = 2048
+
+
 def make_round_step(cfg, policy, *, local_steps: int, lr=0.1, clip=10.0,
-                    cohort_chunk: int = 0):
+                    cohort_chunk: int = 0, agg_block_n: int = AGG_BLOCK_N):
     """The streamed FedHeN round step (see ``steps.make_fed_round_step``)."""
     return make_fed_round_step(cfg, policy, local_steps=local_steps, lr=lr,
-                               clip_norm=clip, cohort_chunk=cohort_chunk)
+                               clip_norm=clip, cohort_chunk=cohort_chunk,
+                               agg_block_n=agg_block_n)
 
 
 def main():
@@ -79,11 +86,17 @@ def main():
 
     step = make_round_step(cfg, policy, local_steps=local_steps,
                            cohort_chunk=cohort_chunk)
+    # the flat fold's precomputed mask bitvector: a round ARGUMENT (one
+    # replicated pred[n_flat] buffer), never a baked executable constant
+    layout = flatten.layout_of(params_abs, total_multiple=AGG_BLOCK_N)
+    flat_mask = flatten.pack_mask(
+        layout, masking.transformer_subnet_mask(params_abs, cfg))
     t0 = time.time()
     with mesh:
-        lowered = jax.jit(step, in_shardings=(cohort_specs, d_spec, d_spec),
+        lowered = jax.jit(step,
+                          in_shardings=(cohort_specs, d_spec, d_spec, None),
                           donate_argnums=(0,)).lower(cohort_abs, data_abs,
-                                                     flags_abs)
+                                                     flags_abs, flat_mask)
         compiled = lowered.compile()
     dt = time.time() - t0
     mem = compiled.memory_analysis()

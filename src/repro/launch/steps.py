@@ -24,7 +24,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import InputShape, ModelConfig
-from repro.core import aggregate, masking
+from repro.core import aggregate, flatten, masking
 from repro.core.adapters import LMAdapter
 from repro.models import transformer as tfm
 from repro.models.common import NO_POLICY, Policy
@@ -49,16 +49,27 @@ def make_train_step(cfg: ModelConfig, policy: Policy = NO_POLICY, *,
 
 def make_fed_round_step(cfg: ModelConfig, policy: Policy = NO_POLICY, *,
                         local_steps: int, lr: float = 0.1,
-                        clip_norm: float = 10.0, cohort_chunk: int = 0):
+                        clip_norm: float = 10.0, cohort_chunk: int = 0,
+                        agg_engine: str = "flat", agg_block_n: int = 2048):
     """One FedHeN round over a stacked cohort, streaming in chunks.
 
-    Returns ``round_step(cohort, data, is_simple) -> (new_complex, loss)``
-    with ``cohort`` stacked client params (K, ...), ``data`` of shape
-    (K, B, local_steps, S+1) and ``is_simple`` (K,).  ``cohort_chunk`` must
-    divide K (0 = one chunk); the engine scans chunk by chunk, folding each
-    trained chunk into running masked sums (``aggregate.streaming``) — the
+    Returns ``round_step(cohort, data, is_simple, flat_mask=None)
+    -> (new_complex, loss)`` with ``cohort`` stacked client params (K, ...),
+    ``data`` of shape (K, B, local_steps, S+1) and ``is_simple`` (K,).
+    ``cohort_chunk`` must divide K (0 = one chunk); the engine scans chunk
+    by chunk, folding each trained chunk into running masked sums — the
     launch-side mirror of core/federated.py's round, operating on an
     externally sharded cohort instead of tiling server params.
+    ``agg_engine="flat"`` (default) packs each trained chunk through the
+    static ``core.flatten`` layout and folds the whole model with one
+    accumulating ``masked_agg`` launch per chunk (``agg_block_n`` tiles);
+    ``"tree"`` keeps the per-leaf parity fold.  Pass the precomputed flat
+    bitvector (``flatten.pack_mask`` over the same layout) as ``flat_mask``
+    so it enters the jit as a replicated argument; if left ``None`` it is
+    derived inside the trace, which XLA constant-folds into a params-sized
+    ``pred`` literal baked into the executable (measured on the reduced
+    config) — fine for tests, wrong at production scale.  The dry-run
+    passes it explicitly.
     """
     adapter = LMAdapter(cfg, policy=policy, remat=True)
 
@@ -81,7 +92,8 @@ def make_fed_round_step(cfg: ModelConfig, policy: Policy = NO_POLICY, *,
             params, loss = step(params, batch)
         return params, loss
 
-    def round_step(cohort: Tree, data: jax.Array, is_simple: jax.Array):
+    def round_step(cohort: Tree, data: jax.Array, is_simple: jax.Array,
+                   flat_mask: Optional[jax.Array] = None):
         k = data.shape[0]
         chunk = k if cohort_chunk <= 0 else cohort_chunk
         if k % chunk:
@@ -90,6 +102,14 @@ def make_fed_round_step(cfg: ModelConfig, policy: Policy = NO_POLICY, *,
         n_chunks = k // chunk
         template = jax.tree.map(lambda x: x[0], cohort)
         mask = masking.transformer_subnet_mask(template, cfg)
+        layout = None
+        if agg_engine == "flat":
+            layout = flatten.layout_of(template, total_multiple=agg_block_n)
+            if flat_mask is None:  # trace-time fallback; see docstring
+                flat_mask = flatten.pack_mask(layout, mask)
+        agg_init, agg_fold, agg_finalize = aggregate.make_engine(
+            agg_engine, algorithm="fedhen", mask=mask, layout=layout,
+            flat_mask=flat_mask, block_n=agg_block_n)
 
         to_chunks = lambda x: x.reshape((n_chunks, chunk) + x.shape[1:])
         xs = (jax.tree.map(to_chunks, cohort), to_chunks(data),
@@ -102,15 +122,13 @@ def make_fed_round_step(cfg: ModelConfig, policy: Policy = NO_POLICY, *,
             trained, losses = jax.vmap(client_train)(
                 cohort_i, data_i.transpose(0, 2, 1, 3), simple_i)
             valid = jax.vmap(masking.tree_isfinite)(trained)
-            state = aggregate.streaming_fold(
-                state, trained, simple_i, valid, mask, algorithm="fedhen")
+            state = agg_fold(state, trained, simple_i, valid)
             return (state, loss_sum + jnp.sum(losses)), None
 
-        state = aggregate.streaming_init(template, "fedhen")
+        state = agg_init(template)
         (state, loss_sum), _ = jax.lax.scan(
             fold_chunk, (state, jnp.zeros((), jnp.float32)), xs)
-        new_complex, _ = aggregate.streaming_finalize(
-            state, mask, template, algorithm="fedhen")
+        new_complex, _ = agg_finalize(state, template=template)
         return new_complex, loss_sum / k
 
     return round_step

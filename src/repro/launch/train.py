@@ -41,7 +41,10 @@ def build_trainer(args) -> tuple:
         local_epochs=args.local_epochs, lr=args.lr,
         batch_size=args.batch_size, iid=not args.non_iid,
         dirichlet_alpha=args.alpha, algorithm=args.algorithm,
-        seed=args.seed, cohort_chunk=args.cohort_chunk)
+        seed=args.seed, cohort_chunk=args.cohort_chunk,
+        agg_engine=args.agg_engine, agg_block_n=args.agg_block_n,
+        agg_stream_dtype=args.agg_stream_dtype,
+        agg_memory_budget_mb=args.agg_memory_budget_mb)
 
     if args.model == "resnet":
         data = synthetic_cifar(args.data_points, 10, seed=args.seed)
@@ -70,6 +73,10 @@ def build_trainer(args) -> tuple:
     return trainer, test_batch
 
 
+def _chunk_arg(v: str):
+    return v if v == "auto" else int(v)
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--model", choices=("resnet", "lm"), default="resnet")
@@ -81,9 +88,23 @@ def main(argv=None):
     ap.add_argument("--rounds", type=int, default=20)
     ap.add_argument("--clients", type=int, default=20)
     ap.add_argument("--participation", type=float, default=0.1)
-    ap.add_argument("--cohort-chunk", type=int, default=0,
+    ap.add_argument("--cohort-chunk", type=_chunk_arg, default=0,
                     help="stream the cohort in chunks of this many clients "
-                         "(0 = whole cohort at once); memory is O(chunk)")
+                         "(0 = whole cohort at once; 'auto' = derive from "
+                         "--agg-memory-budget-mb and the flat layout's "
+                         "per-client footprint); memory is O(chunk)")
+    ap.add_argument("--agg-engine", choices=("flat", "tree"), default="flat",
+                    help="aggregation fold: one fused masked_agg launch "
+                         "over the flat-packed model (flat) or one per "
+                         "leaf (tree, parity reference)")
+    ap.add_argument("--agg-block-n", type=int, default=2048,
+                    help="masked_agg kernel tile width (multiple of 128)")
+    ap.add_argument("--agg-stream-dtype", default="float32",
+                    choices=("float32", "bfloat16"),
+                    help="dtype trained chunks stream through the fold in "
+                         "(accumulation is always f32)")
+    ap.add_argument("--agg-memory-budget-mb", type=float, default=512.0,
+                    help="memory budget targeted by --cohort-chunk auto")
     ap.add_argument("--local-epochs", type=int, default=5)
     ap.add_argument("--lr", type=float, default=0.1)
     ap.add_argument("--batch-size", type=int, default=50)
@@ -101,6 +122,12 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     trainer, test_batch = build_trainer(args)
+    if args.cohort_chunk == "auto":
+        per_mb = trainer.layout.stream_bytes(
+            jnp.dtype(args.agg_stream_dtype)) / 2**20
+        print(f"cohort_chunk=auto -> {trainer.cohort_chunk} "
+              f"(per-client packed {per_mb:.2f} MiB, "
+              f"budget {args.agg_memory_budget_mb:.0f} MiB)")
     if args.resume and args.checkpoint and os.path.exists(args.checkpoint):
         trainer.server = restore_server(args.checkpoint, trainer.server)
         print(f"resumed from round {trainer.server.round}")

@@ -1,13 +1,13 @@
 """Server aggregation unit tests against numpy oracles (Alg. 1 ln. 16-22),
-one-shot AND streaming paths.  Referenced by the ``fedhen_server_update``
-docstring."""
+one-shot AND streaming paths (flat + tree engines).  Referenced by the
+``fedhen_server_update`` docstring."""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import aggregate, masking
+from repro.core import aggregate, flatten, masking
 
 
 def _random_case(seed, z=9):
@@ -147,3 +147,136 @@ def test_streaming_rejects_unknown_algorithm():
             aggregate.streaming_init(jax.tree.map(lambda x: x[0], cohort),
                                      "fedhen"),
             cohort, is_simple, valid, mask, algorithm="fedavg")
+    with pytest.raises(ValueError):
+        aggregate.tree_streaming_init(jax.tree.map(lambda x: x[0], cohort),
+                                      "fedavg")
+
+
+# ---------------------------------------------------------------------------
+# Flat engine == tree engine == one-shot oracle
+# ---------------------------------------------------------------------------
+
+def _stream_tree(cohort, mask, is_simple, valid, algo, chunk):
+    """The PR 2 per-leaf streaming engine (parity reference)."""
+    z = jax.tree.leaves(cohort)[0].shape[0]
+    template = jax.tree.map(lambda x: x[0], cohort)
+    state = aggregate.tree_streaming_init(template, algo)
+    for lo in range(0, z, chunk):
+        sl = slice(lo, min(lo + chunk, z))
+        state = aggregate.tree_streaming_fold(
+            state, jax.tree.map(lambda x: x[sl], cohort),
+            is_simple[sl], valid[sl], mask, algorithm=algo)
+    return aggregate.tree_streaming_finalize(state, mask, template,
+                                             algorithm=algo)
+
+
+def _hard_case(seed, z=9):
+    """NaN device + zero-weight padding device crossing chunk boundaries."""
+    cohort, mask, is_simple, valid = _random_case(seed, z)
+    cohort["a"] = cohort["a"].at[3].set(jnp.nan)   # NaN device
+    valid = valid.at[3].set(False)
+    valid = valid.at[z - 1].set(False)             # zero-weight padding
+    return cohort, mask, is_simple, valid
+
+
+def _assert_tree_allclose(got, want, rtol=2e-5, atol=2e-6):
+    if want is None:
+        assert got is None
+        return
+    for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=rtol, atol=atol)
+
+
+@pytest.mark.parametrize("algo", ["fedhen", "noside", "decouple"])
+@pytest.mark.parametrize("chunk", [2, 4])
+def test_flat_vs_tree_vs_oracle(algo, chunk):
+    """The three paths agree — with a NaN device and a zero-weight padding
+    device in the cohort (both must be invisible to every path)."""
+    cohort, mask, is_simple, valid = _hard_case(7)
+    if algo == "decouple":
+        want_host, want_c = aggregate.decouple_server_update(
+            cohort, is_simple, valid, mask)
+    else:
+        want_c = aggregate.fedhen_server_update(cohort, is_simple, valid,
+                                                mask)
+        want_host = None
+    flat_c, flat_host = _stream(cohort, mask, is_simple, valid, algo, chunk)
+    tree_c, tree_host = _stream_tree(cohort, mask, is_simple, valid, algo,
+                                     chunk)
+    for got_c, got_host in ((flat_c, flat_host), (tree_c, tree_host)):
+        _assert_tree_allclose(got_c, want_c)
+        _assert_tree_allclose(got_host, want_host)
+    # flat vs tree directly: identical summation order per element
+    _assert_tree_allclose(flat_c, tree_c, rtol=1e-6, atol=1e-7)
+    _assert_tree_allclose(flat_host, tree_host, rtol=1e-6, atol=1e-7)
+    for leaf in jax.tree.leaves(flat_c):
+        assert np.isfinite(np.asarray(leaf)).all()
+
+
+@pytest.mark.parametrize("algo", ["fedhen", "decouple"])
+def test_bf16_stream_f32_accumulation(algo):
+    """bf16 chunk streaming: inputs are rounded to bf16 but the running
+    sums stay f32 — the result matches the f32 path at bf16 tolerance and
+    beats accumulating in bf16 outright."""
+    cohort, mask, is_simple, valid = _random_case(8)
+    template = jax.tree.map(lambda x: x[0], cohort)
+    state = aggregate.streaming_init(template, algo)
+    for lo in range(0, 9, 3):
+        sl = slice(lo, lo + 3)
+        state = aggregate.streaming_fold(
+            state, jax.tree.map(lambda x: x[sl], cohort),
+            is_simple[sl], valid[sl], mask, algorithm=algo,
+            stream_dtype=jnp.bfloat16)
+    assert state.acc.dtype == jnp.float32
+    got_c, got_host = aggregate.streaming_finalize(state, mask, template,
+                                                   algorithm=algo)
+    want_c, want_host = _stream(cohort, mask, is_simple, valid, algo, 3)
+    _assert_tree_allclose(got_c, want_c, rtol=2e-2, atol=2e-2)
+    if algo == "decouple":
+        _assert_tree_allclose(got_host, want_host, rtol=2e-2, atol=2e-2)
+
+
+def _count_pallas_calls(fn, *args, **kw):
+    jaxpr = jax.make_jaxpr(lambda *a: fn(*a, **kw))(*args)
+    return sum(1 for eqn in jaxpr.jaxpr.eqns
+               if eqn.primitive.name == "pallas_call")
+
+
+@pytest.mark.parametrize("algo,n_launches", [("fedhen", 1), ("noside", 1),
+                                             ("decouple", 2)])
+def test_flat_fold_is_one_kernel_launch(algo, n_launches):
+    """The tentpole claim: ONE masked-agg launch per fold for the whole
+    model (two for decouple's extra accumulator), vs one per leaf in the
+    tree engine."""
+    cohort, mask, is_simple, valid = _random_case(9)
+    template = jax.tree.map(lambda x: x[0], cohort)
+    state = aggregate.streaming_init(template, algo)
+    n_flat = _count_pallas_calls(
+        aggregate.streaming_fold, state, cohort, is_simple, valid, mask,
+        algorithm=algo, force_pallas_interpret=True)
+    assert n_flat == n_launches
+    tstate = aggregate.tree_streaming_init(template, algo)
+    n_tree = _count_pallas_calls(
+        aggregate.tree_streaming_fold, tstate, cohort, is_simple, valid,
+        mask, algorithm=algo, force_pallas_interpret=True)
+    # tree engine: one launch per leaf — grows with the tree; flat doesn't
+    assert n_tree == len(jax.tree.leaves(cohort))
+
+
+def test_flat_fold_uses_prebuilt_layout_and_mask():
+    """The trainer path: one static layout + precomputed flat bitvector
+    give the same result as the self-deriving defaults."""
+    cohort, mask, is_simple, valid = _random_case(10)
+    template = jax.tree.map(lambda x: x[0], cohort)
+    layout = flatten.layout_of(template, total_multiple=512)
+    flat_mask = flatten.pack_mask(layout, mask)
+    state = aggregate.streaming_init(template, "fedhen", layout=layout)
+    state = aggregate.streaming_fold(
+        state, cohort, is_simple, valid, mask, algorithm="fedhen",
+        layout=layout, flat_mask=flat_mask, block_n=512)
+    got_c, _ = aggregate.streaming_finalize(
+        state, mask, template, algorithm="fedhen", layout=layout,
+        flat_mask=flat_mask)
+    want_c, _ = _stream(cohort, mask, is_simple, valid, "fedhen", 9)
+    _assert_tree_allclose(got_c, want_c, rtol=1e-6, atol=1e-7)

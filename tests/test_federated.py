@@ -176,12 +176,12 @@ def test_rounds_to_target():
 # Streaming cohort engine: chunked rounds == one-shot rounds
 # ---------------------------------------------------------------------------
 
-def _make_chunked_trainer(algorithm, chunk, *, n_devices=12):
+def _make_chunked_trainer(algorithm, chunk, *, n_devices=12, **fed_kw):
     """ks = kc = n_devices/4 active clients per population."""
     fed = FedConfig(n_devices=n_devices, n_simple=n_devices // 2,
                     participation=0.5, rounds=3, local_epochs=1, lr=0.1,
                     clip_norm=10.0, batch_size=4, algorithm=algorithm,
-                    seed=0, cohort_chunk=chunk)
+                    seed=0, cohort_chunk=chunk, **fed_kw)
     data = synthetic_lm(n_devices * 4, 16, TINY.vocab_size, seed=1)
     shards = iid_split(data, fed.n_devices, seed=2)
     return FederatedTrainer(LMAdapter(TINY), fed, shards)
@@ -235,6 +235,63 @@ def test_chunked_multi_round_stays_on_trajectory():
         ref.run_round()
         tr.run_round()
     _assert_server_allclose(ref, tr, rtol=2e-4, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# Flat aggregation engine (layout threading, auto chunk, HLO claim)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("algorithm", ["fedhen", "decouple"])
+def test_flat_round_matches_tree_round(algorithm):
+    """agg_engine only changes the fold's execution layout, never the
+    round's result."""
+    ref = _make_chunked_trainer(algorithm, 2, agg_engine="tree")
+    tr = _make_chunked_trainer(algorithm, 2, agg_engine="flat")
+    m_ref = ref.run_round()
+    m = tr.run_round()
+    _assert_server_allclose(ref, tr)
+    assert m["n_valid"] == m_ref["n_valid"]
+    assert abs(m["loss_complex"] - m_ref["loss_complex"]) < 1e-4
+
+
+def test_auto_cohort_chunk_resolves_from_budget():
+    """cohort_chunk="auto": tiny budget floors at 1; huge budget covers the
+    whole population; the resolved chunk round still matches one-shot."""
+    small = _make_chunked_trainer("fedhen", "auto",
+                                  agg_memory_budget_mb=1e-6)
+    assert small.cohort_chunk == 1
+    big = _make_chunked_trainer("fedhen", "auto",
+                                agg_memory_budget_mb=1e9)
+    assert big.cohort_chunk == max(big.k_simple, big.k_complex)
+    ref = _make_chunked_trainer("fedhen", 0)
+    ref.run_round()
+    small.run_round()
+    _assert_server_allclose(ref, small)
+
+
+def test_trainer_layout_is_static_and_mask_flat():
+    tr = _make_chunked_trainer("fedhen", 2)
+    assert tr.layout.n_flat % tr.fed.agg_block_n == 0
+    assert tr.flat_mask.shape == (tr.layout.n_flat,)
+    assert tr.flat_mask.dtype == jnp.bool_
+    from repro.core import masking
+    n_in_m = masking.mask_size(tr.mask, tr.server.complex)
+    assert int(jnp.sum(tr.flat_mask)) == n_in_m == TINY.simple_param_count()
+
+
+def test_flat_round_hlo_has_fewer_masked_agg_reductions():
+    """Acceptance: the compiled flat round folds the whole model in one
+    masked-agg reduction per fold, so its HLO carries strictly fewer
+    reduce ops than the per-leaf tree round (one per leaf)."""
+    flat = _make_chunked_trainer("fedhen", 2, agg_engine="flat")
+    tree = _make_chunked_trainer("fedhen", 2, agg_engine="tree")
+    txt_flat = flat.lower_round().compile().as_text()
+    txt_tree = tree.lower_round().compile().as_text()
+    n_leaves = len(jax.tree.leaves(flat.server.complex))
+    n_flat, n_tree = txt_flat.count(" reduce("), txt_tree.count(" reduce(")
+    # the non-fold reduces (loss, clipping, validity) are identical in both
+    # programs; the fold's per-leaf launches are the difference
+    assert n_tree - n_flat >= n_leaves - 2, (n_flat, n_tree, n_leaves)
 
 
 # ---------------------------------------------------------------------------

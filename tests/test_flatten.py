@@ -1,0 +1,124 @@
+"""Flat-buffer packing layout (core/flatten.py): offsets, pack/unpack,
+mask lowering, and the memory-budget chunk heuristic."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import flatten
+
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {"a": jnp.asarray(rng.normal(size=(3, 5)).astype(np.float32)),
+            "b": (jnp.asarray(rng.normal(size=(7,)).astype(np.float32)),
+                  jnp.asarray(rng.normal(size=(2, 2, 2)).astype(np.float32))),
+            "c": jnp.asarray(rng.normal(size=(1,)).astype(np.float32))}
+
+
+def test_layout_offsets_are_aligned_and_disjoint():
+    layout = flatten.build_layout(_tree(), align=128, total_multiple=512)
+    offset = 0
+    for slot in layout.slots:
+        assert slot.offset == offset
+        assert slot.offset % 128 == 0
+        assert slot.padded % 128 == 0
+        assert slot.padded >= slot.size == int(np.prod(slot.shape))
+        offset += slot.padded
+    assert layout.n_flat % 512 == 0
+    assert layout.n_flat >= offset
+    assert layout.n_params == 15 + 7 + 8 + 1
+
+
+def test_layout_is_static_per_treedef():
+    """The flat contract: offsets are a pure function of (treedef, shapes,
+    align, total_multiple) — two builds agree, and the cache returns one
+    object."""
+    a = flatten.build_layout(_tree(0), total_multiple=256)
+    b = flatten.build_layout(_tree(1), total_multiple=256)
+    assert a.slots == b.slots and a.n_flat == b.n_flat
+    assert flatten.layout_of(_tree(2), total_multiple=256) is \
+        flatten.layout_of(_tree(3), total_multiple=256)
+
+
+def test_pack_unpack_roundtrip_exact():
+    tree = _tree()
+    layout = flatten.build_layout(tree, total_multiple=2048)
+    flat = flatten.pack(layout, tree)
+    assert flat.shape == (layout.n_flat,) and flat.dtype == jnp.float32
+    back = flatten.unpack(layout, flat)
+    for got, want in zip(jax.tree.leaves(back), jax.tree.leaves(tree)):
+        assert got.dtype == want.dtype
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_pack_stacked_padding_is_zero():
+    tree = _tree()
+    stacked = jax.tree.map(
+        lambda x: jnp.stack([x, 2 * x, -x]), tree)
+    layout = flatten.build_layout(tree, total_multiple=256)
+    buf = flatten.pack_stacked(layout, stacked)
+    assert buf.shape == (3, layout.n_flat)
+    # every element outside a slot's true extent is exactly zero
+    live = np.zeros(layout.n_flat, bool)
+    for slot in layout.slots:
+        live[slot.offset:slot.offset + slot.size] = True
+    np.testing.assert_array_equal(np.asarray(buf)[:, ~live], 0.0)
+    # and each row round-trips to the matching cohort member
+    for z in range(3):
+        back = flatten.unpack(layout, buf[z])
+        for got, want in zip(jax.tree.leaves(back),
+                             jax.tree.leaves(stacked)):
+            np.testing.assert_array_equal(np.asarray(got),
+                                          np.asarray(want[z]))
+
+
+def test_pack_mask_matches_broadcast_leaves():
+    tree = _tree()
+    mask = {"a": jnp.asarray(True),
+            "b": (jnp.asarray(False),
+                  jnp.asarray([True, False])[:, None, None]),
+            "c": jnp.asarray(False)}
+    layout = flatten.build_layout(tree, total_multiple=256)
+    flat_mask = np.asarray(flatten.pack_mask(layout, mask))
+    assert flat_mask.shape == (layout.n_flat,)
+    for leaf, mleaf, slot in zip(
+            jax.tree.leaves(tree), jax.tree.leaves(mask), layout.slots):
+        want = np.broadcast_to(np.asarray(mleaf), leaf.shape).reshape(-1)
+        np.testing.assert_array_equal(
+            flat_mask[slot.offset:slot.offset + slot.size], want)
+        # alignment padding is never inside M
+        assert not flat_mask[slot.offset + slot.size:
+                             slot.offset + slot.padded].any()
+
+
+def test_stacked_layout_strips_cohort_axis():
+    tree = _tree()
+    stacked = jax.tree.map(lambda x: jnp.stack([x, x]), tree)
+    a = flatten.layout_of(tree, total_multiple=256)
+    b = flatten.layout_of(stacked, total_multiple=256, stacked=True)
+    assert a is b
+
+
+def test_bf16_pack_keeps_f32_shapes():
+    tree = _tree()
+    layout = flatten.build_layout(tree, total_multiple=256)
+    flat = flatten.pack(layout, tree, dtype=jnp.bfloat16)
+    assert flat.dtype == jnp.bfloat16
+    back = flatten.unpack(layout, flat)
+    for got, want in zip(jax.tree.leaves(back), jax.tree.leaves(tree)):
+        assert got.dtype == want.dtype  # cast back to the layout dtypes
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32),
+                                   rtol=1e-2, atol=1e-2)
+
+
+def test_auto_cohort_chunk_clamps_to_budget():
+    layout = flatten.build_layout(_tree(), total_multiple=2048)
+    per_client = layout.stream_bytes() * flatten.CLIENT_FOOTPRINT_MULTIPLIER
+    # tiny budget -> floor of 1; exactly 3 clients' worth -> 3; huge -> k
+    assert flatten.auto_cohort_chunk(layout, budget_bytes=1.0, k=10) == 1
+    assert flatten.auto_cohort_chunk(layout, budget_bytes=3 * per_client,
+                                     k=10) == 3
+    assert flatten.auto_cohort_chunk(layout, budget_bytes=1e15, k=10) == 10

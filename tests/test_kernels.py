@@ -8,9 +8,10 @@ import pytest
 
 from repro.kernels.flash_attention.kernel import flash_attention_pallas
 from repro.kernels.flash_attention.ref import flash_attention_ref
-from repro.kernels.masked_agg.kernel import masked_agg_pallas
+from repro.kernels.masked_agg.kernel import (masked_agg_acc_pallas,
+                                             masked_agg_pallas)
 from repro.kernels.masked_agg.ops import masked_agg_leaf, masked_agg_tree
-from repro.kernels.masked_agg.ref import masked_agg_ref
+from repro.kernels.masked_agg.ref import masked_agg_acc_ref, masked_agg_ref
 from repro.kernels.rglru_scan.kernel import lru_scan_pallas
 from repro.kernels.rglru_scan.ref import lru_scan_ref
 
@@ -61,6 +62,80 @@ def test_masked_agg_tree_matches_server_update():
                           force_pallas_interpret=True)
     for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
         np.testing.assert_allclose(g, w, rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("z,n", [(4, 256), (10, 2048), (7, 5000)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_masked_agg_acc_sweep(z, n, dtype):
+    """Accumulating variant (the flat fold's kernel): out = acc + masked
+    sum, f32 accumulation regardless of the streaming dtype."""
+    key = jax.random.PRNGKey(z * 7 + n)
+    ks = jax.random.split(key, 5)
+    acc = jax.random.normal(ks[0], (n,), jnp.float32)
+    x = jax.random.normal(ks[1], (z, n), dtype)
+    mask = jax.random.bernoulli(ks[2], 0.5, (n,))
+    w_m = jax.nn.softmax(jax.random.normal(ks[3], (z,)))
+    w_rest = jax.nn.softmax(jax.random.normal(ks[4], (z,)))
+    got = masked_agg_acc_pallas(acc, x, mask, w_m, w_rest, block_n=1024,
+                                interpret=True)
+    want = masked_agg_acc_ref(acc, x, mask, w_m, w_rest)
+    assert got.dtype == jnp.float32
+    tol = 1e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=tol, atol=tol)
+
+
+def test_masked_agg_acc_folds_match_one_shot():
+    """Chained accumulating folds over chunks == one masked_agg over the
+    whole cohort plus the starting accumulator."""
+    key = jax.random.PRNGKey(11)
+    ks = jax.random.split(key, 3)
+    x = jax.random.normal(ks[0], (8, 512))
+    mask = jax.random.bernoulli(ks[1], 0.5, (512,))
+    w_m = jnp.arange(1.0, 9.0) / 8
+    w_rest = jnp.ones((8,)) / 8
+    acc = jnp.zeros((512,), jnp.float32)
+    for lo in range(0, 8, 2):
+        acc = masked_agg_acc_pallas(acc, x[lo:lo + 2], mask,
+                                    w_m[lo:lo + 2], w_rest[lo:lo + 2],
+                                    block_n=256, interpret=True)
+    want = masked_agg_ref(x, mask, w_m, w_rest)
+    np.testing.assert_allclose(np.asarray(acc), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_masked_agg_acc_nan_gating():
+    acc = jnp.array([1.0, 2.0])
+    x = jnp.array([[jnp.nan, 1.0], [2.0, 3.0]])
+    mask = jnp.array([True, False])
+    got = masked_agg_acc_pallas(acc, x, mask, jnp.array([0.0, 1.0]),
+                                jnp.array([0.0, 1.0]), interpret=True)
+    np.testing.assert_allclose(got, [3.0, 5.0])
+
+
+def test_masked_agg_acc_rejects_non_f32_accumulator():
+    with pytest.raises(ValueError):
+        masked_agg_acc_pallas(jnp.zeros((4,), jnp.bfloat16),
+                              jnp.zeros((2, 4)), jnp.zeros((4,), bool),
+                              jnp.ones((2,)), jnp.ones((2,)),
+                              interpret=True)
+
+
+def test_masked_agg_acc_aliases_accumulator():
+    """The jitted accumulating kernel declares the acc->out alias: with
+    donation, XLA reuses the accumulator buffer (in-place update)."""
+    n = 512
+    fn = jax.jit(
+        lambda acc, x, m, wm, wr: masked_agg_acc_pallas(
+            acc, x, m, wm, wr, block_n=256, interpret=True),
+        donate_argnums=(0,))
+    acc = jnp.ones((n,), jnp.float32)
+    x = jnp.ones((3, n))
+    out = fn(acc, x, jnp.ones((n,), bool), jnp.ones((3,)) / 3,
+             jnp.ones((3,)) / 3)
+    np.testing.assert_allclose(np.asarray(out), 2.0)
+    if jax.default_backend() != "cpu":   # CPU ignores donation
+        assert acc.is_deleted()  # the donated input buffer was consumed
 
 
 # ---------------------------------------------------------------------------

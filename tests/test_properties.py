@@ -8,7 +8,7 @@ import pytest
 hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.core import aggregate, masking
+from repro.core import aggregate, flatten, masking
 from repro.models import common
 
 jax.config.update("jax_platform_name", "cpu")
@@ -69,6 +69,61 @@ def test_invalid_devices_never_contribute(z, bad, seed):
     out = aggregate.fedhen_server_update(cohort, is_simple, valid, mask)
     assert np.isfinite(np.asarray(out["w"])).all()
     np.testing.assert_allclose(out["w"], x[bad:].mean(0), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Flat packing layout invariants
+# ---------------------------------------------------------------------------
+
+_shapes = st.lists(
+    st.lists(st.integers(1, 6), min_size=0, max_size=3).map(tuple),
+    min_size=1, max_size=6)
+
+
+@_settings
+@given(shapes=_shapes, seed=st.integers(0, 999),
+       block=st.sampled_from([128, 256, 1024]))
+def test_pack_unpack_roundtrip(shapes, seed, block):
+    """unpack(pack(tree)) == tree exactly (f32), for any tree shape mix
+    and any kernel block size — the flat layout loses nothing."""
+    rng = np.random.default_rng(seed)
+    tree = {f"l{i}": jnp.asarray(rng.normal(size=s).astype(np.float32))
+            for i, s in enumerate(shapes)}
+    layout = flatten.build_layout(tree, total_multiple=block)
+    assert layout.n_flat % block == 0
+    flat = flatten.pack(layout, tree)
+    back = flatten.unpack(layout, flat)
+    for got, want in zip(jax.tree.leaves(back), jax.tree.leaves(tree)):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@_settings
+@given(shapes=_shapes, z=st.integers(1, 5), seed=st.integers(0, 999))
+def test_flat_fold_matches_tree_fold(shapes, z, seed):
+    """One flat fold == one tree fold for random trees/weights (the packed
+    buffer and bitvector preserve the masked-sum semantics per element)."""
+    rng = np.random.default_rng(seed)
+    cohort = {f"l{i}": jnp.asarray(
+        rng.normal(size=(z,) + s).astype(np.float32))
+        for i, s in enumerate(shapes)}
+    mask = {f"l{i}": jnp.asarray(bool(rng.integers(2)))
+            for i in range(len(shapes))}
+    is_simple = jnp.asarray(rng.integers(2, size=z).astype(bool))
+    valid = jnp.asarray(rng.integers(2, size=z).astype(bool))
+    template = jax.tree.map(lambda x: x[0], cohort)
+    f = aggregate.streaming_fold(
+        aggregate.streaming_init(template, "fedhen"), cohort, is_simple,
+        valid, mask, algorithm="fedhen")
+    t = aggregate.tree_streaming_fold(
+        aggregate.tree_streaming_init(template, "fedhen"), cohort,
+        is_simple, valid, mask, algorithm="fedhen")
+    got, _ = aggregate.streaming_finalize(f, mask, template,
+                                          algorithm="fedhen")
+    want, _ = aggregate.tree_streaming_finalize(t, mask, template,
+                                                algorithm="fedhen")
+    for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=1e-6, atol=1e-7)
 
 
 # ---------------------------------------------------------------------------
