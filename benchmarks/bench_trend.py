@@ -1,0 +1,109 @@
+"""Bench-trend gate: diff a freshly produced BENCH json against the
+committed baseline and fail on a regression in the gated metrics.
+
+The two bench files this repo commits are trend-gated in CI:
+
+* ``BENCH_streaming.json`` (benchmarks/streaming_cohort.py) — rows keyed
+  by ``label``; gated metrics are the quantities the engine owns: compiled
+  round / fold temp bytes and HLO reduce-op counts.  Wall-clock is
+  recorded but NOT gated (CI runners are noisy).
+* ``BENCH_comm.json`` (benchmarks/comm_savings.py) — rows keyed by
+  ``(arch, comm_dtype)``; gated metrics are the wire sizes (bytes/round,
+  down + up) and the savings ratio vs f32.  Accuracy is recorded but NOT
+  gated (4 synthetic rounds are seed noise).
+
+A metric regresses when the fresh value is worse than baseline by more
+than ``--tolerance`` (default 10%): "worse" is *larger* for cost metrics
+(bytes, op counts) and *smaller* for the savings ratio.  Zero-valued
+byte baselines get a small absolute slack so allocator jitter across
+jax/XLA releases cannot flake a 0-vs-208-bytes comparison.
+
+Usage: ``python benchmarks/bench_trend.py BASELINE FRESH [--tolerance .1]``
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List, Tuple
+
+# metric -> direction ("up" = larger is worse, "down" = smaller is worse)
+GATES = {
+    "streaming_cohort": {
+        "key": ("label",),
+        "metrics": {"temp_bytes": "up", "fold_temp_bytes": "up",
+                    "hlo_reduce_ops": "up", "fold_reduce_ops": "up"},
+    },
+    "comm_savings": {
+        "key": ("arch", "comm_dtype"),
+        "metrics": {"bytes_per_round": "up", "bytes_down_per_round": "up",
+                    "bytes_up_per_round": "up", "ratio_vs_f32": "down"},
+    },
+}
+
+# absolute slack for byte metrics whose baseline is ~0 (allocator jitter)
+ZERO_SLACK_BYTES = 4096
+
+
+def index_rows(payload: Dict, key_fields: Tuple[str, ...]) -> Dict:
+    return {tuple(r[k] for k in key_fields): r for r in payload["rows"]}
+
+
+def compare(baseline: Dict, fresh: Dict, tolerance: float) -> List[str]:
+    bench = baseline.get("bench")
+    if bench != fresh.get("bench"):
+        return [f"bench kind mismatch: {bench!r} vs {fresh.get('bench')!r}"]
+    if bench not in GATES:
+        return [f"unknown bench kind {bench!r}"]
+    gate = GATES[bench]
+    base_rows = index_rows(baseline, gate["key"])
+    fresh_rows = index_rows(fresh, gate["key"])
+    failures = []
+    for key, base in base_rows.items():
+        row = fresh_rows.get(key)
+        if row is None:
+            failures.append(f"{key}: row missing from fresh results")
+            continue
+        for metric, direction in gate["metrics"].items():
+            if metric not in base:
+                continue        # baseline predates the metric: not gated
+            b, f = float(base[metric]), float(row[metric])
+            if direction == "up":
+                limit = b * (1.0 + tolerance)
+                if metric.endswith("bytes") and b == 0:
+                    limit += ZERO_SLACK_BYTES
+                bad = f > limit
+            else:
+                bad = f < b * (1.0 - tolerance)
+            if bad:
+                failures.append(f"{key}.{metric}: {f:g} vs baseline {b:g} "
+                                f"(>{tolerance:.0%} {'' if direction == 'up' else 'drop '}regression)")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline", help="committed BENCH json")
+    ap.add_argument("fresh", help="freshly produced BENCH json")
+    ap.add_argument("--tolerance", type=float, default=0.10)
+    args = ap.parse_args(argv)
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    failures = compare(baseline, fresh, args.tolerance)
+    if failures:
+        print(f"TREND REGRESSION vs {args.baseline}:")
+        for line in failures:
+            print(f"  {line}")
+        return 1
+    n = len(baseline.get("rows", []))
+    print(f"trend ok: {args.fresh} within {args.tolerance:.0%} of "
+          f"{args.baseline} ({n} rows)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

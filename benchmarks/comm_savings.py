@@ -1,0 +1,166 @@
+"""Communication savings: wire dtype x architecture sweep (the paper's
+headline claim made measurable).
+
+For each (architecture, comm_dtype) point the sweep runs the full FedHeN
+protocol on the synthetic task and records the trainer's MEASURED wire
+sizes — the real encoder's payload + scale-sidecar bytes per round,
+download and upload separately (``FederatedTrainer._measured_comm_bytes``)
+— together with the end-of-run evaluation, so every bytes/round number is
+paired with the accuracy it buys.  Quantization is not free-floating
+simulation: clients train on the decoded broadcast and the server folds
+the encoded uploads through the dequantizing ``masked_agg`` accumulate, so
+the accuracy delta vs the f32 wire is the round's actual quantization
+error compounded over training.
+
+Headline gate (ISSUE 4 acceptance, CI-enforced by this script's exit
+code): the int8 wire must move >= 3x fewer bytes/round than f32 on every
+architecture (measured incl. the f32 scale sidecar — the analytic ratio at
+quant_block=128 is 128 / (32 + 4) ~= 3.9x), with the end-accuracy delta
+documented in ``BENCH_comm.json`` next to it.
+
+Run as a script to emit ``BENCH_comm.json`` and exit nonzero on a gate
+failure (the CI smoke): ``python benchmarks/comm_savings.py --fast``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FedConfig, LayerSpec, ModelConfig
+from repro.core.adapters import LMAdapter
+from repro.core.federated import FederatedTrainer
+from repro.data.federated import iid_split
+from repro.data.synthetic import synthetic_lm
+
+WIRE_DTYPES = ("float32", "bfloat16", "int8")
+
+# Two heterogeneous-architecture points: a pure-attention stack and a
+# local-attention stack with a deeper exit — different treedefs, leaf
+# shapes and M sizes, so the wire layer is exercised on two layouts.
+ARCHS: Tuple[ModelConfig, ...] = (
+    ModelConfig(name="attn4", n_layers=4, d_model=64, n_heads=4,
+                n_kv_heads=2, d_ff=128, vocab_size=256,
+                pattern=(LayerSpec("attn"),), exit_layer=2,
+                compute_dtype="float32"),
+    ModelConfig(name="local6", n_layers=6, d_model=48, n_heads=4,
+                n_kv_heads=4, d_ff=96, vocab_size=256, window=16,
+                pattern=(LayerSpec("local_attn"),), exit_layer=4,
+                compute_dtype="float32"),
+)
+
+GATE_MIN_INT8_RATIO = 3.0
+
+
+def run_point(cfg: ModelConfig, comm_dtype: str, *, rounds: int,
+              seed: int = 0) -> Dict:
+    fed = FedConfig(n_devices=8, n_simple=4, participation=0.5,
+                    rounds=rounds, local_epochs=1, lr=0.1, batch_size=8,
+                    algorithm="fedhen", seed=seed, cohort_chunk=2,
+                    comm_dtype=comm_dtype)
+    data = synthetic_lm(fed.n_devices * 16, 32, cfg.vocab_size, seed=1)
+    shards = [{"tokens": jnp.asarray(s["tokens"])}
+              for s in iid_split(data, fed.n_devices, seed=2)]
+    trainer = FederatedTrainer(LMAdapter(cfg), fed, shards)
+    test = synthetic_lm(64, 32, cfg.vocab_size, seed=999)
+    test_batch = {"tokens": jnp.asarray(test["tokens"])}
+
+    t0 = time.time()
+    loss = float("nan")
+    for _ in range(rounds):
+        loss = trainer.run_round()["loss_complex"]
+    dt = time.time() - t0
+    ev = trainer.evaluate(test_batch)
+    return {
+        "arch": cfg.name,
+        "comm_dtype": comm_dtype,
+        "rounds": rounds,
+        "bytes_down_per_round": trainer.bytes_down_per_round,
+        "bytes_up_per_round": trainer.bytes_up_per_round,
+        "bytes_per_round": trainer.bytes_per_round,
+        "total_mbytes": trainer.total_bytes / 1e6,
+        "analytic_f32_bytes_per_round": trainer.analytic_bytes_per_round(),
+        "loss_complex": loss,
+        "acc_complex": ev["acc_complex"],
+        "acc_simple": ev["acc_simple"],
+        "us_per_round": dt / rounds * 1e6,
+    }
+
+
+def sweep(rounds: int) -> List[Dict]:
+    rows = []
+    for cfg in ARCHS:
+        base = None
+        for dtype in WIRE_DTYPES:
+            row = run_point(cfg, dtype, rounds=rounds)
+            if dtype == "float32":
+                base = row
+                row["ratio_vs_f32"] = 1.0
+                row["acc_simple_delta_vs_f32"] = 0.0
+                row["acc_complex_delta_vs_f32"] = 0.0
+            else:
+                row["ratio_vs_f32"] = (base["bytes_per_round"]
+                                       / row["bytes_per_round"])
+                row["acc_simple_delta_vs_f32"] = (row["acc_simple"]
+                                                  - base["acc_simple"])
+                row["acc_complex_delta_vs_f32"] = (row["acc_complex"]
+                                                   - base["acc_complex"])
+            rows.append(row)
+    return rows
+
+
+def check_gates(rows: List[Dict]) -> List[str]:
+    failures = []
+    for r in rows:
+        if not np.isfinite(r["loss_complex"]):
+            failures.append(f"{r['arch']}/{r['comm_dtype']}: non-finite "
+                            f"end loss")
+        if r["comm_dtype"] == "int8" and \
+                r["ratio_vs_f32"] < GATE_MIN_INT8_RATIO:
+            failures.append(
+                f"{r['arch']}/int8: bytes/round ratio vs f32 "
+                f"{r['ratio_vs_f32']:.2f} < {GATE_MIN_INT8_RATIO}")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="4 rounds per point (CI smoke)")
+    ap.add_argument("--out", default="BENCH_comm.json")
+    args = ap.parse_args(argv)
+
+    rounds = 4 if args.fast else 12
+    rows = sweep(rounds)
+    payload = {
+        "bench": "comm_savings",
+        "backend": jax.default_backend(),
+        "gate_min_int8_ratio": GATE_MIN_INT8_RATIO,
+        "rows": rows,
+    }
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=1)
+    for r in rows:
+        print(f"{r['arch']:>8}/{r['comm_dtype']:<8}: "
+              f"{r['bytes_per_round'] / 1e6:.3f} MB/round "
+              f"({r['ratio_vs_f32']:.2f}x vs f32), "
+              f"acc_simple {r['acc_simple']:.4f} "
+              f"(d={r['acc_simple_delta_vs_f32']:+.4f}), "
+              f"loss {r['loss_complex']:.4f}")
+
+    failures = check_gates(rows)
+    if failures:
+        print(f"REGRESSION: {failures} (see {args.out})")
+        return 1
+    print(f"ok — wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

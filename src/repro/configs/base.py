@@ -336,6 +336,16 @@ class FedConfig:
     # memory budget targeted by cohort_chunk="auto" (per-client packed
     # footprint x multiplier x chunk <= this).
     agg_memory_budget_mb: float = 512.0
+    # Wire dtype of the communication path (core/comm.py): the server
+    # broadcast is decoded from this format on clients, and client uploads
+    # are folded through it ("int8" via the dequantizing masked_agg
+    # variant — ~3.9x smaller payloads than f32 incl. the scale sidecar).
+    # "float32" is the identity wire (paper accounting, no transform).
+    comm_dtype: str = "float32"
+    # int8 wire scale-group size: one f32 scale per this many elements.
+    # Must divide the flat layout's lane alignment (128) so scale groups
+    # never cross a LeafSlot boundary.
+    quant_block: int = 128
 
     def __post_init__(self):
         if self.agg_engine not in ("flat", "tree"):
@@ -348,3 +358,11 @@ class FedConfig:
         if isinstance(self.cohort_chunk, str) and self.cohort_chunk != "auto":
             raise ValueError(f"cohort_chunk must be an int or 'auto', got "
                              f"{self.cohort_chunk!r}")
+        # wire validation lives with the wire (one source of truth for the
+        # dtype set + quant_block | lane-alignment rule); imported at call
+        # time so the config leaf module never loads repro.core at import
+        from repro.core.comm import WireSpec
+        WireSpec(self.comm_dtype, self.quant_block)
+        if self.comm_dtype == "int8" and self.agg_engine != "flat":
+            raise ValueError("comm_dtype=int8 requires agg_engine='flat' "
+                             "(the dequantizing fold is a flat-buffer op)")

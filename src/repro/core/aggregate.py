@@ -18,6 +18,9 @@ Three entry points:
   accumulating ``masked_agg`` launch (``input_output_aliases`` updates the
   running sum in place on TPU), against one precomputed flat mask
   bitvector.  Chunks may stream in bf16; accumulation is always f32.
+  Under a wire format (``core/comm.py``) the fold consumes the *encoded
+  uploads* — int8 payloads fold through the dequantizing accumulate
+  variant, never materializing an f32 copy of the chunk.
   Unpacking back to the parameter tree happens once, at finalize.
 
   **Flat layout contract**: the layout's offsets are static per (treedef,
@@ -50,7 +53,7 @@ from typing import Any, Callable, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import flatten, masking
+from repro.core import comm, flatten, masking
 from repro.kernels.masked_agg import ops as agg_ops
 
 Tree = Any
@@ -204,6 +207,7 @@ def streaming_fold(state: StreamState, chunk: Tree, is_simple: jax.Array,
                    flat_mask: Optional[jax.Array] = None,
                    block_n: int = 2048,
                    stream_dtype=jnp.float32,
+                   wire: Optional[comm.WireSpec] = None,
                    force_pallas_interpret: bool = False) -> StreamState:
     """Fold one stacked chunk (z, ...) of client models into the flat sums.
 
@@ -218,21 +222,56 @@ def streaming_fold(state: StreamState, chunk: Tree, is_simple: jax.Array,
     summation order exactly.  Invalid (NaN / padding) devices carry weight
     0 and are gated before the multiply on both paths, so they can never
     poison the accumulators.
+
+    ``wire`` switches the fold to the communication path (core/comm.py):
+    the uploads are what the fold consumes.  A bf16 wire overrides
+    ``stream_dtype``; an int8 wire quantizes the packed chunk (symmetric
+    per-group, ``wire.quant_block`` elements per f32 scale — the kernel
+    path packs the chunk to f32 first, the client-side encode, so the
+    fold's peak temp matches the unquantized path) and folds it with the
+    *dequantizing* accumulate — ``masked_agg_acc_deq`` on the kernel path,
+    its XLA ref per leaf slice on CPU — so the *server side* never
+    materializes a dequantized f32 copy of the uploads.  Quantization
+    grouping is identical on both paths (groups never cross slots because
+    ``quant_block`` divides the lane alignment).
     """
     w_in, w_out = _chunk_weights(is_simple, valid, algorithm)
     layout = _layout_for(chunk, layout, block_n, stacked=True)
+    quantized = wire is not None and wire.is_quantized
+    if wire is not None and not wire.is_identity and not quantized:
+        stream_dtype = wire.payload_dtype      # bf16 wire == bf16 stream
     if force_pallas_interpret or agg_ops.use_pallas():
         if flat_mask is None:
             flat_mask = flatten.pack_mask(layout, mask)
-        xz = flatten.pack_stacked(layout, chunk, dtype=stream_dtype)
-        acc = agg_ops.masked_agg_acc_pallas(
-            state.acc, xz, flat_mask, w_in, w_out, block_n=block_n,
-            interpret=force_pallas_interpret)
+        if quantized:
+            xz = flatten.pack_stacked(layout, chunk, dtype=jnp.float32)
+            q, scales = comm.quantize(xz, wire.quant_block)
+            deq = functools.partial(
+                agg_ops.masked_agg_acc_deq_pallas, q=q, scales=scales,
+                mask=flat_mask, quant_block=wire.quant_block,
+                block_n=block_n, interpret=force_pallas_interpret)
+            acc = deq(state.acc, w_m=w_in, w_rest=w_out)
+            acc_out = state.acc_out
+            if acc_out is not None:            # decouple reuses the upload
+                acc_out = deq(acc_out, w_m=w_out, w_rest=w_out)
+        else:
+            xz = flatten.pack_stacked(layout, chunk, dtype=stream_dtype)
+            acc = agg_ops.masked_agg_acc_pallas(
+                state.acc, xz, flat_mask, w_in, w_out, block_n=block_n,
+                interpret=force_pallas_interpret)
+            acc_out = state.acc_out
+            if acc_out is not None:
+                acc_out = agg_ops.masked_agg_acc_pallas(
+                    acc_out, xz, flat_mask, w_out, w_out, block_n=block_n,
+                    interpret=force_pallas_interpret)
+    elif quantized:
+        acc = _fold_leaves_into_flat_deq(state.acc, chunk, mask, layout,
+                                         w_in, w_out, wire.quant_block)
         acc_out = state.acc_out
         if acc_out is not None:
-            acc_out = agg_ops.masked_agg_acc_pallas(
-                acc_out, xz, flat_mask, w_out, w_out, block_n=block_n,
-                interpret=force_pallas_interpret)
+            acc_out = _fold_leaves_into_flat_deq(
+                acc_out, chunk, mask, layout, w_out, w_out,
+                wire.quant_block)
     else:
         acc = _fold_leaves_into_flat(state.acc, chunk, mask, layout,
                                      w_in, w_out, stream_dtype)
@@ -257,6 +296,32 @@ def _fold_leaves_into_flat(acc: jax.Array, chunk: Tree, mask: Tree,
         m_flat = jnp.broadcast_to(jnp.asarray(m), x.shape[1:]).reshape(-1)
         seg = jax.lax.dynamic_slice_in_dim(acc, slot.offset, slot.size)
         seg = agg_ops.masked_agg_acc_ref(seg, body, m_flat, w_m, w_rest)
+        acc = jax.lax.dynamic_update_slice_in_dim(acc, seg, slot.offset, 0)
+    return acc
+
+
+def _fold_leaves_into_flat_deq(acc: jax.Array, chunk: Tree, mask: Tree,
+                               layout: flatten.FlatLayout, w_m: jax.Array,
+                               w_rest: jax.Array, quant_block: int
+                               ) -> jax.Array:
+    """CPU lowering of the quantized fold: each leaf slice is quantized to
+    the wire format (padded to the slot's aligned extent so scale groups
+    match the packed-buffer path element for element) and folded with the
+    dequantizing ref — XLA fuses quantize -> dequant -> FMA per leaf, so
+    no f32 copy of the whole chunk materializes."""
+    for x, m, slot in zip(jax.tree.leaves(chunk), jax.tree.leaves(mask),
+                          layout.slots):
+        z = x.shape[0]
+        body = x.reshape(z, -1).astype(jnp.float32)
+        m_flat = jnp.broadcast_to(jnp.asarray(m), x.shape[1:]).reshape(-1)
+        if slot.padded != slot.size:
+            body = jnp.pad(body, ((0, 0), (0, slot.padded - slot.size)))
+            m_flat = jnp.pad(m_flat, (0, slot.padded - slot.size))
+        q, scales = comm.quantize(body, quant_block)
+        seg = jax.lax.dynamic_slice_in_dim(acc, slot.offset, slot.padded)
+        seg = agg_ops.masked_agg_acc_deq_ref(seg, q, scales, m_flat,
+                                             w_m, w_rest,
+                                             quant_block=quant_block)
         acc = jax.lax.dynamic_update_slice_in_dim(acc, seg, slot.offset, 0)
     return acc
 
@@ -290,7 +355,8 @@ def streaming_finalize(state: StreamState, mask: Tree, template: Tree, *,
 def make_engine(engine: str, *, algorithm: str, mask: Tree,
                 layout: Optional[flatten.FlatLayout] = None,
                 flat_mask: Optional[jax.Array] = None,
-                block_n: int = 2048, stream_dtype=jnp.float32
+                block_n: int = 2048, stream_dtype=jnp.float32,
+                wire: Optional[comm.WireSpec] = None
                 ) -> Tuple[Callable, Callable, Callable]:
     """The ``(init, fold, finalize)`` triple for a fold engine.
 
@@ -301,6 +367,11 @@ def make_engine(engine: str, *, algorithm: str, mask: Tree,
     * ``init(params_like) -> state``
     * ``fold(state, chunk, is_simple, valid) -> state``
     * ``finalize(state, template=...) -> (new_complex, simple_host)``
+
+    ``wire`` routes the fold through the communication path (the uploads
+    are what the server folds): bf16 wires ride the stream dtype, int8
+    wires use the dequantizing accumulate — flat engine only (the tree
+    engine predates the wire layer; FedConfig enforces the pairing).
     """
     if engine == "flat":
         init = functools.partial(streaming_init, algorithm=algorithm,
@@ -308,11 +379,16 @@ def make_engine(engine: str, *, algorithm: str, mask: Tree,
         fold = functools.partial(streaming_fold, mask=mask,
                                  algorithm=algorithm, layout=layout,
                                  flat_mask=flat_mask, block_n=block_n,
-                                 stream_dtype=stream_dtype)
+                                 stream_dtype=stream_dtype, wire=wire)
         finalize = functools.partial(streaming_finalize, mask=mask,
                                      algorithm=algorithm, layout=layout,
                                      flat_mask=flat_mask, block_n=block_n)
     elif engine == "tree":
+        if wire is not None and wire.is_quantized:
+            raise ValueError("int8 wire requires the flat engine "
+                             "(dequantizing fold is a flat-buffer op)")
+        if wire is not None and not wire.is_identity:
+            stream_dtype = wire.payload_dtype
         init = functools.partial(tree_streaming_init, algorithm=algorithm)
         fold = functools.partial(tree_streaming_fold, mask=mask,
                                  algorithm=algorithm, block_n=block_n,

@@ -1,0 +1,222 @@
+"""Quantized flat-buffer communication over ``core.flatten.FlatLayout``.
+
+FedHeN's headline claim is *communication savings*; related systems (FedHe,
+HeteroFL) make the savings concrete with reduced-payload exchange.  This
+module is the wire layer of that claim: the PR 3 ``(Z, n_flat)`` packed
+representation — one contiguous lane-aligned buffer per client — becomes
+the unit of both directions of the protocol:
+
+* **broadcast** (server -> client): the server's flat vector is encoded to
+  the wire dtype and the client trains on the decoded copy, so the round
+  sees the real quantization error;
+* **upload** (client -> server): each trained chunk is encoded to the same
+  wire format and the fold *dequantizes inside the accumulate* — the
+  ``masked_agg`` kernel's ``masked_agg_acc_deq`` variant consumes int8
+  payloads + per-group f32 scales directly, so no separate materialized
+  f32 copy of the cohort ever exists on the server.
+
+Wire formats (``WireSpec.dtype``):
+
+* ``float32`` — the identity wire (paper accounting; no transform);
+* ``bfloat16`` — 2-byte payload, no sidecar;
+* ``int8`` — symmetric per-group quantization ``q = round(x / s)``,
+  ``s = max|x| / 127`` per contiguous group of ``quant_block`` elements,
+  plus an f32 scale sidecar (``ceil(n / quant_block)`` scales).
+
+``quant_block`` must divide the layout's lane alignment (128), so a scale
+group never crosses a ``LeafSlot`` boundary: quantization error is bounded
+*per slot* by that slot's own magnitudes, alignment-padding groups are
+all-zero (scale 0 -> payload 0 -> decode 0), and the CPU fallback can fold
+leaf by leaf without changing group boundaries.
+
+Byte accounting is **measured, not estimated**: ``wire_bytes`` runs the
+real encoder under ``jax.eval_shape`` and sums the output buffer sizes, so
+the trainer's per-round numbers are the encoder's actual output — payload
+*and* sidecar — for the true (compact) element counts.  Alignment padding
+is a local layout artifact the sender strips (offsets are static on both
+ends), so it is never billed to the wire.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import flatten
+
+Tree = Any
+
+WIRE_DTYPES = ("float32", "bfloat16", "int8")
+
+# int8 symmetric range: +-127 (−128 unused, keeps the code symmetric)
+_QMAX = 127.0
+
+
+@dataclasses.dataclass(frozen=True)
+class WireSpec:
+    """Static description of the wire format for one federated link.
+
+    ``dtype`` is the payload dtype; ``quant_block`` is the elements-per-
+    scale group (int8 only; must divide the lane alignment so groups stay
+    inside slots — see module docstring).
+    """
+    dtype: str = "float32"
+    quant_block: int = 128
+
+    def __post_init__(self):
+        if self.dtype not in WIRE_DTYPES:
+            raise ValueError(f"wire dtype must be one of {WIRE_DTYPES}, "
+                             f"got {self.dtype!r}")
+        if self.quant_block <= 0 or flatten.LANES % self.quant_block:
+            raise ValueError(f"quant_block must divide the lane alignment "
+                             f"({flatten.LANES}), got {self.quant_block}")
+
+    @property
+    def is_identity(self) -> bool:
+        return self.dtype == "float32"
+
+    @property
+    def is_quantized(self) -> bool:
+        return self.dtype == "int8"
+
+    @property
+    def payload_dtype(self):
+        return jnp.dtype(self.dtype)
+
+
+class WireBuffer(NamedTuple):
+    """One encoded flat buffer: payload in the wire dtype (+ the f32 scale
+    sidecar for quantized wires, else ``None``)."""
+    payload: jax.Array
+    scales: Optional[jax.Array]
+
+
+def buffer_nbytes(buf: WireBuffer) -> int:
+    """Measured wire size of one encoded buffer (payload + sidecar).
+    Works on concrete arrays and ``ShapeDtypeStruct``s alike."""
+    n = buf.payload.size * jnp.dtype(buf.payload.dtype).itemsize
+    if buf.scales is not None:
+        n += buf.scales.size * jnp.dtype(buf.scales.dtype).itemsize
+    return int(n)
+
+
+# ---------------------------------------------------------------------------
+# Quantize / dequantize (symmetric per-group int8)
+# ---------------------------------------------------------------------------
+
+def quantize(x: jax.Array, quant_block: int) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-group int8: x (..., n) -> (q int8 (..., n), scales f32
+    (..., n/quant_block)).  ``n`` must be a multiple of ``quant_block``.
+
+    All-zero groups get scale 0 and payload 0 (decode is exactly 0, so
+    alignment padding stays invisible to any sum).  Non-finite inputs
+    produce a non-finite scale; the fold's weight gating zeroes those
+    devices before the multiply, mirroring the f32 NaN-device contract.
+    """
+    n = x.shape[-1]
+    if n % quant_block:
+        raise ValueError(f"length {n} not a multiple of "
+                         f"quant_block={quant_block}")
+    g = x.astype(jnp.float32).reshape(x.shape[:-1] + (-1, quant_block))
+    scales = jnp.max(jnp.abs(g), axis=-1) / _QMAX
+    q = jnp.round(g / jnp.maximum(scales[..., None], 1e-30))
+    q = jnp.where(scales[..., None] > 0, q, 0.0)
+    q = jnp.clip(q, -_QMAX, _QMAX).astype(jnp.int8)
+    return q.reshape(x.shape), scales
+
+
+def dequantize(q: jax.Array, scales: jax.Array,
+               quant_block: int) -> jax.Array:
+    """Inverse of :func:`quantize`: int8 payload + scales -> f32."""
+    g = q.astype(jnp.float32).reshape(q.shape[:-1] + (-1, quant_block))
+    return (g * scales[..., None]).reshape(q.shape)
+
+
+# ---------------------------------------------------------------------------
+# Encode / decode (one flat vector or a stacked (Z, n) chunk)
+# ---------------------------------------------------------------------------
+
+def encode(spec: WireSpec, flat: jax.Array) -> WireBuffer:
+    """Flat f32 vector (..., n) -> wire buffer.  For int8 wires, lengths
+    that are not a group multiple are zero-padded into the last group (the
+    sidecar covers ``ceil(n / quant_block)`` groups); payload keeps the
+    caller's length."""
+    if spec.is_quantized:
+        n = flat.shape[-1]
+        pad = (-n) % spec.quant_block
+        body = jnp.pad(flat.astype(jnp.float32),
+                       [(0, 0)] * (flat.ndim - 1) + [(0, pad)]) \
+            if pad else flat
+        q, scales = quantize(body, spec.quant_block)
+        return WireBuffer(q[..., :n], scales)
+    return WireBuffer(flat.astype(spec.payload_dtype), None)
+
+
+def decode(spec: WireSpec, buf: WireBuffer) -> jax.Array:
+    """Wire buffer -> f32 flat vector of the payload's length."""
+    if spec.is_quantized:
+        n = buf.payload.shape[-1]
+        pad = (-n) % spec.quant_block
+        q = jnp.pad(buf.payload, [(0, 0)] * (buf.payload.ndim - 1)
+                    + [(0, pad)]) if pad else buf.payload
+        return dequantize(q, buf.scales, spec.quant_block)[..., :n]
+    return buf.payload.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Measured byte accounting
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def wire_bytes(spec: WireSpec, n_elements: int) -> int:
+    """Measured wire size of an ``n_elements`` exchange: the real encoder's
+    output buffers under ``jax.eval_shape`` (no compute), payload + scale
+    sidecar.  This is what the trainer bills per client per direction."""
+    buf = jax.eval_shape(functools.partial(encode, spec),
+                         jax.ShapeDtypeStruct((n_elements,), jnp.float32))
+    return buffer_nbytes(buf)
+
+
+def analytic_wire_bytes(spec: WireSpec, n_elements: int) -> int:
+    """Closed-form size the measured number must match (consistency test):
+    ``n * itemsize`` plus ``ceil(n / quant_block) * 4`` for int8."""
+    n = n_elements * spec.payload_dtype.itemsize
+    if spec.is_quantized:
+        n += (-(-n_elements // spec.quant_block)) * 4
+    return n
+
+
+# ---------------------------------------------------------------------------
+# Tree-level paths (broadcast + checkpoint reuse the same encoder)
+# ---------------------------------------------------------------------------
+
+def encode_tree(spec: WireSpec, layout: flatten.FlatLayout,
+                tree: Tree) -> WireBuffer:
+    """Pack a parameter tree through ``layout`` and encode the flat vector
+    — the broadcast/checkpoint unit (one contiguous buffer per model)."""
+    return encode(spec, flatten.pack(layout, tree))
+
+
+def decode_tree(spec: WireSpec, layout: flatten.FlatLayout,
+                buf: WireBuffer, template: Optional[Tree] = None) -> Tree:
+    """Decode a wire buffer and unpack to the layout's tree (leaf dtypes
+    from the layout).  When ``template`` is given its treedef must equal
+    the layout's — a mismatch means the buffer would unpack into the
+    wrong structure."""
+    if template is not None and \
+            jax.tree.structure(template) != layout.treedef:
+        raise ValueError("template treedef does not match the layout's")
+    return flatten.unpack(layout, decode(spec, buf))
+
+
+def broadcast_roundtrip(spec: WireSpec, layout: flatten.FlatLayout,
+                        tree: Tree) -> Tree:
+    """What a client receives: the server tree after one encode/decode trip
+    through the wire.  Identity (no ops traced) for the f32 wire."""
+    if spec.is_identity:
+        return tree
+    return decode_tree(spec, layout, encode_tree(spec, layout, tree))

@@ -43,6 +43,16 @@ instead of one launch per leaf.  ``agg_engine="tree"`` keeps the per-leaf
 PR 2 fold as the parity engine; the two differ only by float summation
 order across kernel tile boundaries.
 
+**Wire contract.**  ``FedConfig.comm_dtype`` selects the round's wire
+format (``core/comm.py``): the server broadcast is encoded/decoded through
+it before clients train (so the round sees the real quantization error),
+and client uploads are folded through it — the int8 wire via the
+dequantizing ``masked_agg`` accumulate, so the server never materializes
+an f32 copy of the uploads.  Per-round byte accounting is *measured* from
+the encoder's real output sizes (payload + scale sidecar, download and
+upload separately), replacing the old analytic estimate (kept as
+``analytic_bytes_per_round`` — the consistency oracle).
+
 Cohort composition is stratified (k_s simple + k_c complex per round, the
 expectation of the paper's uniform 10% sampling) so shapes stay static;
 ``sample_uniform=True`` recovers uniform sampling via validity-weight
@@ -60,7 +70,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import FedConfig
-from repro.core import aggregate, flatten, masking
+from repro.core import aggregate, comm, flatten, masking
 from repro.optim.sgd import sgd_update
 
 Tree = Any
@@ -158,9 +168,18 @@ class FederatedTrainer:
         self.layout = flatten.build_layout(self.server.complex,
                                            total_multiple=fed.agg_block_n)
         self.flat_mask = flatten.pack_mask(self.layout, self.mask)
+        # communication wire format (core/comm.py): the broadcast is
+        # decoded from it on clients, uploads are folded through it, and
+        # the byte accounting below measures its real encoded sizes
+        self.wire = comm.WireSpec(fed.comm_dtype, fed.quant_block)
         self.cohort_chunk = self._resolve_cohort_chunk()
-        self.bytes_per_round = self._bytes_per_round()
+        (self.bytes_down_per_round,
+         self.bytes_up_per_round) = self._measured_comm_bytes()
+        self.bytes_per_round = (self.bytes_down_per_round
+                                + self.bytes_up_per_round)
         self.total_bytes = 0.0
+        self.total_bytes_down = 0.0
+        self.total_bytes_up = 0.0
         # donate the server state buffers into the round (they are replaced
         # wholesale each round); CPU has no donation support, skip the noise
         donate = (0, 1) if jax.default_backend() != "cpu" else ()
@@ -174,16 +193,50 @@ class FederatedTrainer:
         footprint fits ``agg_memory_budget_mb`` (else the configured int)."""
         fed = self.fed
         if fed.cohort_chunk == "auto":
+            stream_dtype, qb = self._effective_stream()
             return flatten.auto_cohort_chunk(
                 self.layout,
                 budget_bytes=fed.agg_memory_budget_mb * 2**20,
                 k=max(self.k_simple, self.k_complex),
-                stream_dtype=jnp.dtype(fed.agg_stream_dtype))
+                stream_dtype=stream_dtype, quant_block=qb)
         return int(fed.cohort_chunk)
+
+    def _effective_stream(self):
+        """(dtype, quant_block) the fold's stream buffer actually uses:
+        the wire payload when a wire is configured, else the plain
+        streaming dtype."""
+        if self.wire.is_quantized:
+            return jnp.dtype(jnp.int8), self.wire.quant_block
+        if not self.wire.is_identity:
+            return self.wire.payload_dtype, 0
+        return jnp.dtype(self.fed.agg_stream_dtype), 0
+
+    def stream_bytes_per_client(self) -> int:
+        """One client's packed stream-buffer footprint at the effective
+        wire/stream dtype (incl. the int8 scale sidecar) — what
+        ``cohort_chunk="auto"`` budgets per client."""
+        stream_dtype, qb = self._effective_stream()
+        return self.layout.stream_bytes(stream_dtype, quant_block=qb)
 
     # -- communication accounting ------------------------------------------
 
-    def _bytes_per_round(self) -> float:
+    def _measured_comm_bytes(self) -> Tuple[float, float]:
+        """(download, upload) bytes per round, MEASURED from the wire
+        encoder's real output buffers (payload + scale sidecar) for the
+        true element counts: complex devices exchange the whole model,
+        simple devices only the index set M.  Alignment padding is a local
+        layout artifact (static offsets on both ends) and is never billed.
+        """
+        n_m = int(np.sum(np.asarray(self.flat_mask)))   # |M| true elements
+        per_complex = comm.wire_bytes(self.wire, self.layout.n_params)
+        per_simple = comm.wire_bytes(self.wire, n_m)
+        one_way = float(self.k_simple * per_simple
+                        + self.k_complex * per_complex)
+        return one_way, one_way
+
+    def analytic_bytes_per_round(self) -> float:
+        """The pre-wire estimate (param counts x param itemsize, down+up)
+        — kept as the consistency oracle for the measured numbers."""
         params = self.server.complex
         total = sum(x.size * x.dtype.itemsize
                     for x in jax.tree.leaves(params))
@@ -207,6 +260,7 @@ class FederatedTrainer:
 
         layout = self.layout
         stream_dtype = jnp.dtype(fed.agg_stream_dtype)
+        wire = self.wire
 
         def make_agg(flat_mask):
             """Engine dispatch.  ``flat_mask`` is a round *argument* (not a
@@ -216,7 +270,7 @@ class FederatedTrainer:
             return aggregate.make_engine(
                 fed.agg_engine, algorithm=algo, mask=mask, layout=layout,
                 flat_mask=flat_mask, block_n=fed.agg_block_n,
-                stream_dtype=stream_dtype)
+                stream_dtype=stream_dtype, wire=wire)
 
         def tile(tree, k):
             return jax.tree.map(
@@ -269,13 +323,20 @@ class FederatedTrainer:
                      flat_mask: Optional[jax.Array]):
             agg_init, agg_fold, agg_finalize = make_agg(flat_mask)
             rs, rc = jax.random.split(rng)
-            src_simple = simple_host if algo == "decouple" else complex_params
+            # the server -> client broadcast crosses the wire: clients
+            # train on the DECODED copy, so the round carries the real
+            # quantization error (identity for the f32 wire)
+            bc_complex = comm.broadcast_roundtrip(wire, layout,
+                                                  complex_params)
+            src_simple = (comm.broadcast_roundtrip(wire, layout,
+                                                   simple_host)
+                          if algo == "decouple" else bc_complex)
             state = agg_init(complex_params)
             state, loss_s, valid_s = stream_population(
                 state, src_simple, train_simple, data_s, rs, agg_fold,
                 k=self.k_simple, is_simple_flag=True)
             state, loss_c, valid_c = stream_population(
-                state, complex_params, train_complex, data_c, rc, agg_fold,
+                state, bc_complex, train_complex, data_c, rc, agg_fold,
                 k=self.k_complex, is_simple_flag=False)
             new_complex, new_simple_host = agg_finalize(
                 state, template=complex_params)
@@ -334,6 +395,8 @@ class FederatedTrainer:
                                   simple_host=new_simple_host,
                                   round=self.server.round + 1)
         self.total_bytes += self.bytes_per_round
+        self.total_bytes_down += self.bytes_down_per_round
+        self.total_bytes_up += self.bytes_up_per_round
         return {k: float(v) for k, v in metrics.items()}
 
     def evaluate(self, test_batch: Batch) -> Dict[str, float]:
@@ -346,6 +409,8 @@ class FederatedTrainer:
             ms = self.adapter.evaluate(self.server.simple_host, test_batch)
             m["acc_simple"] = float(ms["acc_simple"])
         m["mbytes"] = self.total_bytes / 1e6
+        m["mbytes_down"] = self.total_bytes_down / 1e6
+        m["mbytes_up"] = self.total_bytes_up / 1e6
         return m
 
     def run(self, rounds: int, *, eval_every: int = 0,

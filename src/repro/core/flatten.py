@@ -29,6 +29,7 @@ boundaries — in practice bit-identical per element.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax
@@ -66,9 +67,27 @@ class FlatLayout:
         """True parameter count (excludes alignment padding)."""
         return sum(s.size for s in self.slots)
 
-    def stream_bytes(self, dtype=jnp.float32) -> int:
-        """Bytes one packed client occupies at the given stream dtype."""
-        return self.n_flat * jnp.dtype(dtype).itemsize
+    @property
+    def signature(self) -> str:
+        """Stable fingerprint of the packing plan (slot offsets, shapes,
+        dtypes).  Two different layouts frequently collide on ``n_flat``
+        (it is rounded up to ``total_multiple``), so consumers that
+        persist flat buffers (checkpoint restore) must compare this, not
+        just the length, before unpacking."""
+        desc = repr([(s.offset, s.size, s.padded, s.shape,
+                      str(jnp.dtype(s.dtype))) for s in self.slots])
+        return hashlib.sha1(desc.encode()).hexdigest()[:16]
+
+    def stream_bytes(self, dtype=jnp.float32, *, quant_block: int = 0) -> int:
+        """Bytes one packed client occupies at the given stream dtype.
+
+        For an int8 wire (``quant_block > 0``) the buffer carries an f32
+        scale sidecar of one scale per ``quant_block`` elements — auto
+        chunking must budget for it, not just the payload."""
+        n = self.n_flat * jnp.dtype(dtype).itemsize
+        if quant_block and jnp.dtype(dtype) == jnp.int8:
+            n += (self.n_flat // quant_block) * 4
+        return n
 
 
 def _round_up(n: int, m: int) -> int:
@@ -194,7 +213,7 @@ CLIENT_FOOTPRINT_MULTIPLIER = 6.0
 
 
 def auto_cohort_chunk(layout: FlatLayout, *, budget_bytes: float, k: int,
-                      stream_dtype=jnp.float32,
+                      stream_dtype=jnp.float32, quant_block: int = 0,
                       multiplier: float = CLIENT_FOOTPRINT_MULTIPLIER) -> int:
     """Largest chunk whose per-client footprint x chunk fits the budget.
 
@@ -202,9 +221,11 @@ def auto_cohort_chunk(layout: FlatLayout, *, budget_bytes: float, k: int,
     rule: per-client footprint x chunk <= HBM headroom.  Only the one
     stream-buffer copy shrinks with a narrower ``stream_dtype``; the other
     ``multiplier - 1`` copies (params, grads, update temps, activations)
-    stay f32, so bf16 streaming must not halve the whole estimate.
+    stay f32, so bf16 streaming must not halve the whole estimate.  An
+    int8 wire's scale sidecar (``quant_block``) is part of the stream copy.
     """
     per_client = (layout.stream_bytes(jnp.float32) * (multiplier - 1.0)
-                  + layout.stream_bytes(stream_dtype))
+                  + layout.stream_bytes(stream_dtype,
+                                        quant_block=quant_block))
     chunk = int(budget_bytes // max(per_client, 1.0))
     return max(1, min(chunk, max(k, 1)))

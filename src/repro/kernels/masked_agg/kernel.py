@@ -12,7 +12,7 @@ cohort through VMEM exactly once with lane-aligned tiles:
   reduced over Z in one fused multiply-add in f32, written back in the
   storage dtype.
 
-Two variants:
+Three variants:
 
 * ``masked_agg_pallas`` — the one-shot reduction (out = masked sum).
 * ``masked_agg_acc_pallas`` — the streaming fold's accumulating form:
@@ -20,6 +20,13 @@ Two variants:
   f32 accumulator is updated **in place** — the fold writes N floats
   instead of reading+writing two accumulator copies, halving accumulator
   HBM traffic.  Inputs may be bf16; accumulation is always f32.
+* ``masked_agg_acc_deq_pallas`` — the quantized-upload fold: the cohort
+  tile arrives as int8 payload + per-group f32 scales (the wire format of
+  ``core/comm.py``) and is dequantized *inside* the accumulate, so the
+  server never materializes an f32 copy of the uploads — int8 tiles also
+  cut the fold's HBM read traffic 4x vs f32.  ``quant_block`` must divide
+  ``block_n`` so scale groups tile with the grid; the dequant reshape
+  keeps the 128-lane axis intact ((Z, block_n) -> (Z, groups, 128-mult)).
 
 Neither wrapper is ``jax.jit``-ed: both always run inside the already
 jitted round (or a jitted test harness), where an extra jit would only add
@@ -121,4 +128,71 @@ def masked_agg_acc_pallas(acc: jax.Array, x: jax.Array, mask: jax.Array,
         input_output_aliases={0: 0},
         interpret=interpret,
     )(acc[None, :], x, mask[None, :], w_m[:, None], w_rest[:, None])
+    return out[0, :n]
+
+
+def _make_agg_acc_deq_kernel(quant_block: int):
+    def kernel(acc_ref, q_ref, scale_ref, mask_ref, wm_ref, wr_ref, out_ref):
+        z, bn = q_ref.shape
+        g = q_ref[...].astype(jnp.float32).reshape(z, bn // quant_block,
+                                                   quant_block)
+        x = (g * scale_ref[...][..., None]).reshape(z, bn)  # fused dequant
+        w = jnp.where(mask_ref[...],
+                      wm_ref[...].astype(jnp.float32),
+                      wr_ref[...].astype(jnp.float32))      # (Z, block_n)
+        x = jnp.where(w > 0, x, 0.0)                        # NaN-device gating
+        out_ref[...] = acc_ref[...] + jnp.sum(x * w, axis=0, keepdims=True)
+    return kernel
+
+
+def masked_agg_acc_deq_pallas(acc: jax.Array, q: jax.Array,
+                              scales: jax.Array, mask: jax.Array,
+                              w_m: jax.Array, w_rest: jax.Array, *,
+                              quant_block: int, block_n: int = 2048,
+                              interpret: bool = False) -> jax.Array:
+    """Dequantizing accumulating fold: acc (N,) f32 + masked sum of the
+    int8 payload q (Z, N) x per-group scales (Z, N/quant_block) -> (N,) f32.
+
+    ``acc`` is aliased to the output (in-place update); the payload is
+    dequantized tile-locally in VMEM, never materialized in f32.  N must be
+    a multiple of ``quant_block`` (the flat layout guarantees it: the wire
+    contract requires quant_block | 128 | n_flat) and ``block_n`` must be a
+    group multiple so scale groups tile with the grid.
+    """
+    if acc.dtype != jnp.float32:
+        raise ValueError(f"accumulator must be f32, got {acc.dtype}")
+    if q.dtype != jnp.int8:
+        raise ValueError(f"payload must be int8, got {q.dtype}")
+    if block_n % quant_block:
+        raise ValueError(f"block_n={block_n} not a multiple of "
+                         f"quant_block={quant_block}")
+    z, n = q.shape
+    if n % quant_block:
+        raise ValueError(f"N={n} not a multiple of quant_block={quant_block}")
+    pad = (-n) % block_n
+    if pad:
+        acc = jnp.pad(acc, (0, pad))
+        q = jnp.pad(q, ((0, 0), (0, pad)))
+        scales = jnp.pad(scales, ((0, 0), (0, pad // quant_block)))
+        mask = jnp.pad(mask, (0, pad))
+    np_ = q.shape[1]
+    grid = (np_ // block_n,)
+    block_g = block_n // quant_block
+
+    out = pl.pallas_call(
+        _make_agg_acc_deq_kernel(quant_block),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_n), lambda i: (0, i)),
+            pl.BlockSpec((z, block_n), lambda i: (0, i)),
+            pl.BlockSpec((z, block_g), lambda i: (0, i)),
+            pl.BlockSpec((1, block_n), lambda i: (0, i)),
+            pl.BlockSpec((z, 1), lambda i: (0, 0)),
+            pl.BlockSpec((z, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_n), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, np_), jnp.float32),
+        input_output_aliases={0: 0},
+        interpret=interpret,
+    )(acc[None, :], q, scales, mask[None, :], w_m[:, None], w_rest[:, None])
     return out[0, :n]

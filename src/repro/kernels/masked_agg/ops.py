@@ -6,8 +6,12 @@ contiguous ``(Z, n_flat)`` buffer and calls ``masked_agg_acc_pallas``
 (re-exported here) with *raw* unnormalized weights, accumulating into one
 flat f32 running sum divided once per round: one launch per fold, updated
 in place via ``input_output_aliases``; on CPU it folds per leaf directly
-into the flat accumulator's slices.  ``masked_agg_tree`` below keeps the
-PR 2 per-leaf path (one launch per leaf) as the parity engine.
+into the flat accumulator's slices.  Under an int8 wire
+(``FedConfig.comm_dtype``) the fold instead calls
+``masked_agg_acc_deq_pallas`` — the dequantizing accumulate that consumes
+the wire payload + per-group scales directly (``masked_agg_acc_deq_ref``
+is its CPU/oracle form).  ``masked_agg_tree`` below keeps the PR 2
+per-leaf path (one launch per leaf) as the parity engine.
 
 Backend selection (``use_pallas``): the Pallas kernel targets TPU; on CPU
 (this container) the XLA reference path runs instead — set
@@ -24,9 +28,12 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.masked_agg.kernel import (masked_agg_acc_pallas,
+from repro.kernels.masked_agg.kernel import (masked_agg_acc_deq_pallas,
+                                             masked_agg_acc_pallas,
                                              masked_agg_pallas)
-from repro.kernels.masked_agg.ref import masked_agg_acc_ref, masked_agg_ref
+from repro.kernels.masked_agg.ref import (masked_agg_acc_deq_ref,
+                                          masked_agg_acc_ref,
+                                          masked_agg_ref)
 
 Tree = Any
 

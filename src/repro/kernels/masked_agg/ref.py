@@ -44,3 +44,29 @@ def masked_agg_acc_ref(acc: jnp.ndarray, x: jnp.ndarray, mask: jnp.ndarray,
         xz = jnp.where(wz > 0, x[z].astype(jnp.float32), 0.0)
         out = out + xz * wz
     return out
+
+
+def masked_agg_acc_deq_ref(acc: jnp.ndarray, q: jnp.ndarray,
+                           scales: jnp.ndarray, mask: jnp.ndarray,
+                           w_m: jnp.ndarray, w_rest: jnp.ndarray, *,
+                           quant_block: int) -> jnp.ndarray:
+    """Dequantizing accumulating fold (oracle for
+    ``masked_agg_acc_deq_pallas``): acc (N,) f32 + masked sum of int8
+    payload q (Z, N) x per-group f32 scales (Z, N/quant_block) -> f32.
+
+    Row-streamed like ``masked_agg_acc_ref``: each client's payload is
+    dequantized inside its own fused elementwise chain (int8 -> f32 cast,
+    per-group scale broadcast, gate, FMA), so no f32 copy of the whole
+    quantized chunk ever materializes — the CPU mirror of the kernel's
+    tile-local dequant.  A non-finite scale row (NaN device) is killed by
+    the weight gate before the multiply, same as the f32 paths.
+    """
+    z, n = q.shape
+    out = acc
+    for row in range(z):
+        s = jnp.repeat(scales[row], quant_block, total_repeat_length=n)
+        xz = q[row].astype(jnp.float32) * s
+        wz = jnp.where(mask, w_m[row], w_rest[row]).astype(jnp.float32)
+        xz = jnp.where(wz > 0, xz, 0.0)
+        out = out + xz * wz
+    return out

@@ -24,7 +24,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import InputShape, ModelConfig
-from repro.core import aggregate, flatten, masking
+from repro.core import aggregate, comm, flatten, masking
 from repro.core.adapters import LMAdapter
 from repro.models import transformer as tfm
 from repro.models.common import NO_POLICY, Policy
@@ -50,7 +50,8 @@ def make_train_step(cfg: ModelConfig, policy: Policy = NO_POLICY, *,
 def make_fed_round_step(cfg: ModelConfig, policy: Policy = NO_POLICY, *,
                         local_steps: int, lr: float = 0.1,
                         clip_norm: float = 10.0, cohort_chunk: int = 0,
-                        agg_engine: str = "flat", agg_block_n: int = 2048):
+                        agg_engine: str = "flat", agg_block_n: int = 2048,
+                        comm_dtype: str = "float32", quant_block: int = 128):
     """One FedHeN round over a stacked cohort, streaming in chunks.
 
     Returns ``round_step(cohort, data, is_simple, flat_mask=None)
@@ -70,8 +71,14 @@ def make_fed_round_step(cfg: ModelConfig, policy: Policy = NO_POLICY, *,
     ``pred`` literal baked into the executable (measured on the reduced
     config) — fine for tests, wrong at production scale.  The dry-run
     passes it explicitly.
+
+    ``comm_dtype`` selects the upload wire (core/comm.py): the externally
+    sharded cohort arrives already broadcast, so only the client->server
+    direction crosses this step — the fold consumes the encoded uploads
+    (int8 via the dequantizing masked_agg accumulate).
     """
     adapter = LMAdapter(cfg, policy=policy, remat=True)
+    wire = comm.WireSpec(comm_dtype, quant_block)
 
     def constrain_cohort(tree):
         return jax.tree.map(
@@ -109,7 +116,7 @@ def make_fed_round_step(cfg: ModelConfig, policy: Policy = NO_POLICY, *,
                 flat_mask = flatten.pack_mask(layout, mask)
         agg_init, agg_fold, agg_finalize = aggregate.make_engine(
             agg_engine, algorithm="fedhen", mask=mask, layout=layout,
-            flat_mask=flat_mask, block_n=agg_block_n)
+            flat_mask=flat_mask, block_n=agg_block_n, wire=wire)
 
         to_chunks = lambda x: x.reshape((n_chunks, chunk) + x.shape[1:])
         xs = (jax.tree.map(to_chunks, cohort), to_chunks(data),

@@ -26,7 +26,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
-from repro.checkpoint.checkpoint import restore_server, save_server
+from repro.checkpoint.checkpoint import (restore_server, restore_server_flat,
+                                         save_server, save_server_flat)
 from repro.configs.base import FedConfig
 from repro.core.adapters import LMAdapter, ResNetAdapter
 from repro.core.federated import FederatedTrainer, rounds_to_target
@@ -44,7 +45,8 @@ def build_trainer(args) -> tuple:
         seed=args.seed, cohort_chunk=args.cohort_chunk,
         agg_engine=args.agg_engine, agg_block_n=args.agg_block_n,
         agg_stream_dtype=args.agg_stream_dtype,
-        agg_memory_budget_mb=args.agg_memory_budget_mb)
+        agg_memory_budget_mb=args.agg_memory_budget_mb,
+        comm_dtype=args.comm_dtype, quant_block=args.quant_block)
 
     if args.model == "resnet":
         data = synthetic_cifar(args.data_points, 10, seed=args.seed)
@@ -105,6 +107,16 @@ def main(argv=None):
                          "(accumulation is always f32)")
     ap.add_argument("--agg-memory-budget-mb", type=float, default=512.0,
                     help="memory budget targeted by --cohort-chunk auto")
+    ap.add_argument("--comm-dtype", default="float32",
+                    choices=("float32", "bfloat16", "int8"),
+                    help="wire format of the communication path: clients "
+                         "train on the decoded broadcast and uploads are "
+                         "folded through it (int8 = symmetric per-group "
+                         "quantization with f32 scales, dequantized inside "
+                         "the masked_agg accumulate)")
+    ap.add_argument("--quant-block", type=int, default=128,
+                    help="int8 wire scale-group size (elements per f32 "
+                         "scale; must divide 128)")
     ap.add_argument("--local-epochs", type=int, default=5)
     ap.add_argument("--lr", type=float, default=0.1)
     ap.add_argument("--batch-size", type=int, default=50)
@@ -116,6 +128,11 @@ def main(argv=None):
     ap.add_argument("--eval-every", type=int, default=5)
     ap.add_argument("--checkpoint", default="")
     ap.add_argument("--checkpoint-every", type=int, default=0)
+    ap.add_argument("--checkpoint-format", default="tree",
+                    choices=("tree", "flat"),
+                    help="'flat' saves ONE packed flat buffer per model "
+                         "through the comm wire encoder (int8 wires make "
+                         "it lossy — same error the broadcast carries)")
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--target-simple", type=float, default=0.0)
     ap.add_argument("--history-out", default="")
@@ -123,13 +140,23 @@ def main(argv=None):
 
     trainer, test_batch = build_trainer(args)
     if args.cohort_chunk == "auto":
-        per_mb = trainer.layout.stream_bytes(
-            jnp.dtype(args.agg_stream_dtype)) / 2**20
+        per_mb = trainer.stream_bytes_per_client() / 2**20
         print(f"cohort_chunk=auto -> {trainer.cohort_chunk} "
-              f"(per-client packed {per_mb:.2f} MiB, "
+              f"(per-client packed {per_mb:.2f} MiB at wire/stream dtype, "
               f"budget {args.agg_memory_budget_mb:.0f} MiB)")
+    if args.comm_dtype != "float32":
+        print(f"comm wire {args.comm_dtype}: "
+              f"{trainer.bytes_per_round / 1e6:.3f} MB/round measured "
+              f"(down {trainer.bytes_down_per_round / 1e6:.3f} + up "
+              f"{trainer.bytes_up_per_round / 1e6:.3f}; f32 analytic "
+              f"{trainer.analytic_bytes_per_round() / 1e6:.3f})")
     if args.resume and args.checkpoint and os.path.exists(args.checkpoint):
-        trainer.server = restore_server(args.checkpoint, trainer.server)
+        if args.checkpoint_format == "flat":
+            trainer.server = restore_server_flat(args.checkpoint,
+                                                 trainer.server,
+                                                 trainer.layout)
+        else:
+            trainer.server = restore_server(args.checkpoint, trainer.server)
         print(f"resumed from round {trainer.server.round}")
 
     t0 = time.time()
@@ -144,7 +171,11 @@ def main(argv=None):
         history.append(m)
         if args.checkpoint and args.checkpoint_every and \
                 (r + 1) % args.checkpoint_every == 0:
-            save_server(args.checkpoint, trainer.server)
+            if args.checkpoint_format == "flat":
+                save_server_flat(args.checkpoint, trainer.server,
+                                 trainer.layout, wire=trainer.wire)
+            else:
+                save_server(args.checkpoint, trainer.server)
 
     dt = time.time() - t0
     print(f"\n{args.algorithm}: {args.rounds} rounds in {dt:.1f}s "

@@ -65,3 +65,121 @@ def test_federated_resume(tmp_path):
     # resumed trainer keeps training
     m = tr2.run_round()
     assert np.isfinite(m["loss_complex"])
+
+
+# ---------------------------------------------------------------------------
+# Flat-buffer checkpoints (wire-encoded packed vectors)
+# ---------------------------------------------------------------------------
+
+def _tiny_trainer(algorithm="fedhen"):
+    cfg = ModelConfig(n_layers=2, d_model=32, n_heads=2, n_kv_heads=2,
+                      d_ff=64, vocab_size=64, pattern=(LayerSpec("attn"),),
+                      exit_layer=1, compute_dtype="float32")
+    fed = FedConfig(n_devices=4, n_simple=2, participation=0.5, rounds=3,
+                    local_epochs=1, batch_size=4, algorithm=algorithm)
+    data = synthetic_lm(32, 16, 64, seed=1)
+    shards = [{"tokens": jnp.asarray(s["tokens"])}
+              for s in iid_split(data, 4, seed=2)]
+    return FederatedTrainer(LMAdapter(cfg), fed, shards), cfg, fed, shards
+
+
+def test_flat_checkpoint_f32_roundtrip_exact(tmp_path):
+    from repro.checkpoint.checkpoint import (restore_server_flat,
+                                             save_server_flat)
+    tr, cfg, fed, shards = _tiny_trainer()
+    tr.run_round()
+    path = str(tmp_path / "flat.npz")
+    save_server_flat(path, tr.server, tr.layout)     # default f32 wire
+    tr2, *_ = _tiny_trainer()
+    tr2.server = restore_server_flat(path, tr2.server, tr2.layout)
+    assert tr2.server.round == 1
+    for a, b in zip(jax.tree.leaves(tr2.server.complex),
+                    jax.tree.leaves(tr.server.complex)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    m = tr2.run_round()                              # resumes training
+    assert np.isfinite(m["loss_complex"])
+
+
+def test_flat_checkpoint_decouple_carries_host(tmp_path):
+    from repro.checkpoint.checkpoint import (restore_server_flat,
+                                             save_server_flat)
+    tr, *_ = _tiny_trainer("decouple")
+    tr.run_round()
+    path = str(tmp_path / "flat.npz")
+    save_server_flat(path, tr.server, tr.layout)
+    tr2, *_ = _tiny_trainer("decouple")
+    tr2.server = restore_server_flat(path, tr2.server, tr2.layout)
+    for a, b in zip(jax.tree.leaves(tr2.server.simple_host),
+                    jax.tree.leaves(tr.server.simple_host)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_flat_checkpoint_wire_dtypes_lossy_but_bounded(tmp_path):
+    from repro.checkpoint.checkpoint import (restore_server_flat,
+                                             save_server_flat)
+    from repro.core import comm
+    import os
+    tr, *_ = _tiny_trainer()
+    tr.run_round()
+    sizes = {}
+    for dtype in ("float32", "bfloat16", "int8"):
+        path = str(tmp_path / f"flat_{dtype}.npz")
+        save_server_flat(path, tr.server, tr.layout,
+                         wire=comm.WireSpec(dtype, 128))
+        sizes[dtype] = os.path.getsize(path)
+        tr2, *_ = _tiny_trainer()
+        tr2.server = restore_server_flat(path, tr2.server, tr2.layout)
+        for a, b in zip(jax.tree.leaves(tr2.server.complex),
+                        jax.tree.leaves(tr.server.complex)):
+            amax = float(jnp.max(jnp.abs(b))) + 1e-12
+            err = float(jnp.max(jnp.abs(a - b)))
+            tol = {"float32": 0.0, "bfloat16": amax * 8e-3,
+                   "int8": amax / 127.0}[dtype]
+            assert err <= tol, (dtype, err, tol)
+    assert sizes["int8"] < sizes["bfloat16"] < sizes["float32"]
+
+
+def test_flat_checkpoint_layout_mismatch_rejected(tmp_path):
+    """Both mismatch layers: a different n_flat, AND — the dangerous case
+    — a different slot table that collides on n_flat (rounded up to
+    total_multiple), which must be caught by the layout fingerprint
+    instead of silently unpacking scrambled parameters."""
+    from repro.checkpoint.checkpoint import (restore_server_flat,
+                                             save_server_flat)
+    from repro.core import flatten
+    tr, *_ = _tiny_trainer()
+    path = str(tmp_path / "flat.npz")
+    save_server_flat(path, tr.server, tr.layout)
+    bigger = flatten.build_layout(tr.server.complex,
+                                  total_multiple=2 * tr.layout.n_flat)
+    assert bigger.n_flat != tr.layout.n_flat
+    with np.testing.assert_raises(ValueError):
+        restore_server_flat(path, tr.server, bigger)
+    # same n_flat, different packing: a toy tree rounded up to the same
+    # total collides on length but not on the slot fingerprint
+    collider = flatten.build_layout({"x": jnp.zeros((7,))},
+                                    total_multiple=tr.layout.n_flat)
+    assert collider.n_flat == tr.layout.n_flat
+    assert collider.signature != tr.layout.signature
+    with np.testing.assert_raises(ValueError):
+        restore_server_flat(path, tr.server, collider)
+
+
+def test_checkpoints_save_at_verbatim_path(tmp_path):
+    """np.savez appends '.npz' to bare filenames, which would break the
+    resume guard (saver writes x.npz, restore stats x): both savers must
+    write the exact path they were given."""
+    from repro.checkpoint.checkpoint import (restore_server_flat,
+                                             save_server_flat)
+    tr, *_ = _tiny_trainer()
+    bare = str(tmp_path / "server.ckpt")         # no .npz suffix
+    save_server(bare, tr.server)
+    assert os.path.exists(bare)
+    restored = restore_server(bare, tr.server)
+    assert restored.round == tr.server.round
+    bare_flat = str(tmp_path / "server_flat.ckpt")
+    save_server_flat(bare_flat, tr.server, tr.layout)
+    assert os.path.exists(bare_flat)
+    restored = restore_server_flat(bare_flat, tr.server, tr.layout)
+    assert restored.round == tr.server.round

@@ -1,0 +1,357 @@
+"""Quantized flat-buffer communication (core/comm.py): wire roundtrips,
+per-slot error bounds, the dequantizing fold's parity with the f32 upload
+path, and measured-vs-analytic byte accounting."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import FedConfig, LayerSpec, ModelConfig
+from repro.core import aggregate, comm, flatten
+from repro.core.adapters import LMAdapter
+from repro.core.federated import FederatedTrainer
+from repro.data.federated import iid_split
+from repro.data.synthetic import synthetic_lm
+
+
+def _tree(seed=0, scale_b=100.0):
+    """Leaves at very different magnitudes: per-slot scales must keep the
+    error of each leaf proportional to ITS OWN magnitude."""
+    rng = np.random.default_rng(seed)
+    return {"a": jnp.asarray(rng.normal(size=(3, 5)).astype(np.float32)),
+            "b": jnp.asarray((scale_b * rng.normal(size=(200,)))
+                             .astype(np.float32)),
+            "c": jnp.asarray(rng.normal(size=(2, 2)).astype(np.float32))}
+
+
+# ---------------------------------------------------------------------------
+# WireSpec validation
+# ---------------------------------------------------------------------------
+
+def test_wire_spec_validation():
+    assert comm.WireSpec("float32").is_identity
+    assert comm.WireSpec("int8").is_quantized
+    assert not comm.WireSpec("bfloat16").is_identity
+    with pytest.raises(ValueError):
+        comm.WireSpec("float16")
+    with pytest.raises(ValueError):
+        comm.WireSpec("int8", quant_block=0)
+    with pytest.raises(ValueError):
+        comm.WireSpec("int8", quant_block=96)   # does not divide 128
+    with pytest.raises(ValueError):
+        comm.WireSpec("int8", quant_block=256)  # exceeds the alignment
+
+
+def test_fedconfig_wire_validation():
+    with pytest.raises(ValueError):
+        FedConfig(comm_dtype="float16")
+    with pytest.raises(ValueError):
+        FedConfig(comm_dtype="int8", agg_engine="tree")
+    with pytest.raises(ValueError):
+        FedConfig(quant_block=96)
+    FedConfig(comm_dtype="int8")        # flat engine default: fine
+    FedConfig(comm_dtype="bfloat16", agg_engine="tree")  # bf16+tree: fine
+
+
+# ---------------------------------------------------------------------------
+# Quantize / dequantize
+# ---------------------------------------------------------------------------
+
+def test_quantize_roundtrip_error_bound_per_group():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(4, 512)).astype(np.float32))
+    q, scales = comm.quantize(x, 128)
+    assert q.dtype == jnp.int8 and scales.shape == (4, 4)
+    back = np.asarray(comm.dequantize(q, scales, 128))
+    # error of each element <= half a quantization step of ITS group
+    err = np.abs(back - np.asarray(x)).reshape(4, 4, 128)
+    step = np.asarray(scales)[..., None]
+    assert (err <= 0.5 * step + 1e-7).all()
+
+
+def test_quantize_zero_group_is_exact_zero():
+    x = jnp.zeros((256,))
+    q, scales = comm.quantize(x, 128)
+    np.testing.assert_array_equal(np.asarray(scales), 0.0)
+    np.testing.assert_array_equal(np.asarray(q), 0)
+    np.testing.assert_array_equal(np.asarray(comm.dequantize(q, scales,
+                                                             128)), 0.0)
+
+
+def test_encode_decode_roundtrip_per_slot_bounds():
+    """Int8 wire error of every slot is bounded by that slot's own group
+    maxima — a 100x louder neighbouring leaf must not leak error in."""
+    tree = _tree()
+    layout = flatten.build_layout(tree, total_multiple=256)
+    flat = flatten.pack(layout, tree)
+    spec = comm.WireSpec("int8", 128)
+    back = comm.decode(spec, comm.encode(spec, flat))
+    flat_np, back_np = np.asarray(flat), np.asarray(back)
+    for slot in layout.slots:
+        seg = slice(slot.offset, slot.offset + slot.size)
+        amax = np.abs(flat_np[seg]).max()
+        err = np.abs(back_np[seg] - flat_np[seg]).max()
+        assert err <= amax / 127.0 * 0.5 + 1e-7, (slot, err, amax)
+    # alignment padding decodes to exactly zero
+    live = np.zeros(layout.n_flat, bool)
+    for slot in layout.slots:
+        live[slot.offset:slot.offset + slot.size] = True
+    np.testing.assert_array_equal(back_np[~live], 0.0)
+
+
+@pytest.mark.parametrize("dtype,rtol", [("float32", 0.0),
+                                        ("bfloat16", 1e-2)])
+def test_encode_decode_float_wires(dtype, rtol):
+    flat = flatten.pack(flatten.build_layout(_tree(), total_multiple=256),
+                        _tree())
+    spec = comm.WireSpec(dtype)
+    back = comm.decode(spec, comm.encode(spec, flat))
+    assert back.dtype == jnp.float32
+    if rtol == 0.0:
+        np.testing.assert_array_equal(np.asarray(back), np.asarray(flat))
+    else:
+        np.testing.assert_allclose(np.asarray(back), np.asarray(flat),
+                                   rtol=rtol, atol=rtol)
+
+
+def test_encode_handles_non_group_multiple_length():
+    spec = comm.WireSpec("int8", 128)
+    x = jnp.asarray(np.random.default_rng(2).normal(size=(300,))
+                    .astype(np.float32))
+    buf = comm.encode(spec, x)
+    assert buf.payload.shape == (300,) and buf.scales.shape == (3,)
+    back = comm.decode(spec, buf)
+    assert back.shape == (300,)
+    amax = float(jnp.max(jnp.abs(x)))
+    assert float(jnp.max(jnp.abs(back - x))) <= amax / 127.0 * 0.5 + 1e-7
+
+
+# ---------------------------------------------------------------------------
+# Measured byte accounting
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16", "int8"])
+@pytest.mark.parametrize("n", [128, 300, 4096])
+def test_wire_bytes_measured_matches_analytic(dtype, n):
+    spec = comm.WireSpec(dtype, 128)
+    measured = comm.wire_bytes(spec, n)
+    assert measured == comm.analytic_wire_bytes(spec, n)
+    # and both match a concretely encoded buffer
+    buf = comm.encode(spec, jnp.ones((n,)))
+    assert comm.buffer_nbytes(buf) == measured
+
+
+def test_int8_wire_bytes_beat_f32_by_3x():
+    """The acceptance ratio at the accounting level: payload/4 + sidecar
+    still >= 3x smaller (3.88x at quant_block=128)."""
+    spec8 = comm.WireSpec("int8", 128)
+    spec32 = comm.WireSpec("float32")
+    for n in (2048, 165888):
+        assert comm.wire_bytes(spec32, n) / comm.wire_bytes(spec8, n) >= 3.0
+
+
+# ---------------------------------------------------------------------------
+# Upload fold parity: wire vs f32 (all algorithms, NaN/zero-weight devices)
+# ---------------------------------------------------------------------------
+
+def _random_cohort(seed, z=8):
+    rng = np.random.default_rng(seed)
+    cohort = {"a": jnp.asarray(rng.normal(size=(z, 4, 3))
+                               .astype(np.float32)),
+              "b": jnp.asarray((50.0 * rng.normal(size=(z, 5)))
+                               .astype(np.float32))}
+    mask = {"a": jnp.asarray(True), "b": jnp.asarray(False)}
+    is_simple = jnp.asarray(np.arange(z) < z // 2)
+    valid = jnp.ones(z, bool)
+    # a NaN device and a zero-weight padding device (both must be gated)
+    cohort["a"] = cohort["a"].at[2].set(jnp.nan)
+    valid = valid.at[2].set(False)
+    valid = valid.at[z - 1].set(False)
+    return cohort, mask, is_simple, valid
+
+
+def _stream_wire(cohort, mask, is_simple, valid, algo, chunk, wire,
+                 **fold_kw):
+    z = jax.tree.leaves(cohort)[0].shape[0]
+    template = jax.tree.map(lambda x: x[0], cohort)
+    state = aggregate.streaming_init(template, algo)
+    for lo in range(0, z, chunk):
+        sl = slice(lo, min(lo + chunk, z))
+        state = aggregate.streaming_fold(
+            state, jax.tree.map(lambda x: x[sl], cohort),
+            is_simple[sl], valid[sl], mask, algorithm=algo, wire=wire,
+            **fold_kw)
+    return aggregate.streaming_finalize(state, mask, template,
+                                        algorithm=algo)
+
+
+def _assert_tree_allclose(got, want, rtol, atol):
+    if want is None:
+        assert got is None
+        return
+    for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=rtol, atol=atol)
+
+
+@pytest.mark.parametrize("algo", ["fedhen", "noside", "decouple"])
+@pytest.mark.parametrize("chunk", [3, 8])
+def test_int8_upload_fold_matches_f32_fold(algo, chunk):
+    cohort, mask, is_simple, valid = _random_cohort(3)
+    wire = comm.WireSpec("int8", 128)
+    f32_c, f32_host = _stream_wire(cohort, mask, is_simple, valid, algo,
+                                   chunk, None)
+    q_c, q_host = _stream_wire(cohort, mask, is_simple, valid, algo,
+                               chunk, wire)
+    # int8 tolerance: |err| <= amax/254 per group; leaves here are O(50)
+    _assert_tree_allclose(q_c, f32_c, rtol=2e-2, atol=0.3)
+    _assert_tree_allclose(q_host, f32_host, rtol=2e-2, atol=0.3)
+    for leaf in jax.tree.leaves(q_c):
+        assert np.isfinite(np.asarray(leaf)).all()
+
+
+@pytest.mark.parametrize("algo", ["fedhen", "decouple"])
+def test_int8_fold_kernel_path_matches_cpu_path(algo):
+    """The dequantizing kernel (interpret mode) and the per-leaf CPU ref
+    produce the same accumulators: identical quantization grouping."""
+    cohort, mask, is_simple, valid = _random_cohort(4)
+    wire = comm.WireSpec("int8", 128)
+    cpu_c, cpu_host = _stream_wire(cohort, mask, is_simple, valid, algo,
+                                   3, wire)
+    ker_c, ker_host = _stream_wire(cohort, mask, is_simple, valid, algo,
+                                   3, wire, force_pallas_interpret=True)
+    _assert_tree_allclose(ker_c, cpu_c, rtol=1e-5, atol=1e-6)
+    _assert_tree_allclose(ker_host, cpu_host, rtol=1e-5, atol=1e-6)
+
+
+def test_bf16_wire_fold_rides_stream_dtype():
+    cohort, mask, is_simple, valid = _random_cohort(5)
+    wire = comm.WireSpec("bfloat16")
+    got_c, _ = _stream_wire(cohort, mask, is_simple, valid, "fedhen", 4,
+                            wire)
+    want_c, _ = _stream_wire(cohort, mask, is_simple, valid, "fedhen", 4,
+                             None, stream_dtype=jnp.bfloat16)
+    _assert_tree_allclose(got_c, want_c, rtol=1e-6, atol=1e-7)
+
+
+def test_int8_wire_rejects_tree_engine():
+    with pytest.raises(ValueError):
+        aggregate.make_engine("tree", algorithm="fedhen", mask={},
+                              wire=comm.WireSpec("int8"))
+
+
+# ---------------------------------------------------------------------------
+# Broadcast roundtrip
+# ---------------------------------------------------------------------------
+
+def test_decode_tree_rejects_mismatched_template():
+    tree = _tree()
+    layout = flatten.build_layout(tree, total_multiple=256)
+    spec = comm.WireSpec("float32")
+    buf = comm.encode_tree(spec, layout, tree)
+    out = comm.decode_tree(spec, layout, buf, template=tree)
+    for got, want in zip(jax.tree.leaves(out), jax.tree.leaves(tree)):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    with pytest.raises(ValueError):
+        comm.decode_tree(spec, layout, buf, template={"x": tree["a"]})
+
+
+def test_broadcast_roundtrip_identity_for_f32():
+    tree = _tree()
+    layout = flatten.build_layout(tree, total_multiple=256)
+    out = comm.broadcast_roundtrip(comm.WireSpec("float32"), layout, tree)
+    assert out is tree        # no ops traced at all
+
+
+def test_broadcast_roundtrip_int8_bounds():
+    tree = _tree()
+    layout = flatten.build_layout(tree, total_multiple=256)
+    out = comm.broadcast_roundtrip(comm.WireSpec("int8", 128), layout, tree)
+    for got, want in zip(jax.tree.leaves(out), jax.tree.leaves(tree)):
+        assert got.dtype == want.dtype
+        amax = float(jnp.max(jnp.abs(want)))
+        assert float(jnp.max(jnp.abs(got - want))) <= amax / 127.0
+
+
+# ---------------------------------------------------------------------------
+# Trainer integration: wire rounds + measured accounting
+# ---------------------------------------------------------------------------
+
+TINY = ModelConfig(n_layers=4, d_model=32, n_heads=2, n_kv_heads=2,
+                   d_ff=64, vocab_size=64, pattern=(LayerSpec("attn"),),
+                   exit_layer=2, compute_dtype="float32")
+
+
+def _make_trainer(algorithm="fedhen", **fed_kw):
+    fed_kw.setdefault("cohort_chunk", 2)
+    fed = FedConfig(n_devices=8, n_simple=4, participation=0.5, rounds=3,
+                    local_epochs=1, lr=0.1, batch_size=4,
+                    algorithm=algorithm, seed=0, **fed_kw)
+    data = synthetic_lm(32, 16, TINY.vocab_size, seed=1)
+    shards = iid_split(data, fed.n_devices, seed=2)
+    return FederatedTrainer(LMAdapter(TINY), fed, shards)
+
+
+def test_trainer_measured_equals_analytic_for_f32_wire():
+    """The f32 wire bills exactly the paper's analytic accounting (true
+    element counts x 4 bytes, down+up) — padding is never billed."""
+    tr = _make_trainer()
+    assert tr.bytes_per_round == tr.analytic_bytes_per_round()
+    assert tr.bytes_down_per_round == tr.bytes_up_per_round
+    assert tr.bytes_per_round == (tr.bytes_down_per_round
+                                  + tr.bytes_up_per_round)
+
+
+def test_trainer_measured_bytes_monotone_and_gated():
+    f32 = _make_trainer()
+    bf16 = _make_trainer(comm_dtype="bfloat16")
+    int8 = _make_trainer(comm_dtype="int8")
+    assert int8.bytes_per_round < bf16.bytes_per_round < f32.bytes_per_round
+    assert bf16.bytes_per_round == f32.bytes_per_round / 2
+    assert f32.bytes_per_round / int8.bytes_per_round >= 3.0
+
+
+@pytest.mark.parametrize("algorithm", ["fedhen", "decouple"])
+def test_int8_wire_round_stays_near_f32_round(algorithm):
+    """One full round through the quantized broadcast + dequantizing
+    upload fold lands close to the f32 round and stays finite."""
+    ref = _make_trainer(algorithm)
+    tr = _make_trainer(algorithm, comm_dtype="int8")
+    m_ref = ref.run_round()
+    m = tr.run_round()
+    assert np.isfinite(m["loss_complex"])
+    assert m["n_valid"] == m_ref["n_valid"]
+    for a, b in zip(jax.tree.leaves(tr.server.complex),
+                    jax.tree.leaves(ref.server.complex)):
+        delta = float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                      - b.astype(jnp.float32))))
+        assert delta < 0.05, delta
+
+
+def test_total_bytes_accumulate_per_direction():
+    tr = _make_trainer(comm_dtype="int8")
+    tr.run_round()
+    tr.run_round()
+    assert tr.total_bytes_down == 2 * tr.bytes_down_per_round
+    assert tr.total_bytes_up == 2 * tr.bytes_up_per_round
+    assert tr.total_bytes == tr.total_bytes_down + tr.total_bytes_up
+    test = {"tokens": jnp.asarray(synthetic_lm(8, 16, TINY.vocab_size,
+                                               seed=9)["tokens"])}
+    ev = tr.evaluate(test)
+    assert ev["mbytes"] == pytest.approx(ev["mbytes_down"]
+                                         + ev["mbytes_up"])
+
+
+def test_auto_chunk_budgets_int8_sidecar():
+    """cohort_chunk="auto" under the int8 wire must budget the scale
+    sidecar: the int8 stream copy is cheaper than f32, so the resolved
+    chunk can only grow — and stream_bytes includes the sidecar."""
+    layout = flatten.build_layout(LMAdapter(TINY).init(
+        jax.random.PRNGKey(0)), total_multiple=2048)
+    b8 = layout.stream_bytes(jnp.int8, quant_block=128)
+    assert b8 == layout.n_flat + layout.n_flat // 128 * 4
+    f32 = _make_trainer(cohort_chunk="auto", agg_memory_budget_mb=1.0)
+    int8 = _make_trainer(cohort_chunk="auto", agg_memory_budget_mb=1.0,
+                         comm_dtype="int8")
+    assert int8.cohort_chunk >= f32.cohort_chunk

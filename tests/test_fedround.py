@@ -46,3 +46,35 @@ def test_round_step_tiny():
         for a, b in zip(jax.tree.leaves(new_complex),
                         jax.tree.leaves(params)))
     assert changed
+
+
+def test_round_step_int8_wire_matches_f32():
+    """The launch-side round folds encoded uploads: the int8 wire's
+    dequantizing fold lands near the f32 round and stays finite."""
+    from repro.launch.steps import make_fed_round_step
+    from repro.models import transformer as tfm
+    from repro.models.common import NO_POLICY
+
+    cfg = ModelConfig(n_layers=2, d_model=32, n_heads=2, n_kv_heads=2,
+                      d_ff=64, vocab_size=64, pattern=(LayerSpec("attn"),),
+                      exit_layer=1, compute_dtype="float32")
+    k_clients, batch, steps, seq = 4, 2, 2, 16
+    params = tfm.init_params(jax.random.PRNGKey(0), cfg)
+    cohort = jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (k_clients,) + x.shape), params)
+    data = jax.random.randint(jax.random.PRNGKey(1),
+                              (k_clients, batch, steps, seq + 1), 0, 64)
+    is_simple = jnp.array([True, True, False, False])
+
+    ref_step = make_fed_round_step(cfg, NO_POLICY, local_steps=steps,
+                                   cohort_chunk=2)
+    q_step = make_fed_round_step(cfg, NO_POLICY, local_steps=steps,
+                                 cohort_chunk=2, comm_dtype="int8")
+    ref_c, ref_loss = jax.jit(ref_step)(cohort, data, is_simple)
+    q_c, q_loss = jax.jit(q_step)(cohort, data, is_simple)
+    assert np.isfinite(float(q_loss))
+    # uploads are quantized but training is identical: same loss metric
+    np.testing.assert_allclose(float(q_loss), float(ref_loss), rtol=1e-5)
+    for a, b in zip(jax.tree.leaves(q_c), jax.tree.leaves(ref_c)):
+        amax = float(jnp.max(jnp.abs(b))) + 1e-12
+        assert float(jnp.max(jnp.abs(a - b))) <= amax / 100.0

@@ -114,6 +114,25 @@ def test_bf16_pack_keeps_f32_shapes():
                                    rtol=1e-2, atol=1e-2)
 
 
+def test_stream_bytes_accounts_quantized_sidecar():
+    """Under an int8 wire the stream buffer carries an f32 scale per
+    quant_block elements — auto chunking must budget payload + sidecar."""
+    layout = flatten.build_layout(_tree(), total_multiple=2048)
+    assert layout.stream_bytes(jnp.float32) == layout.n_flat * 4
+    assert layout.stream_bytes(jnp.int8) == layout.n_flat          # no qb
+    assert layout.stream_bytes(jnp.int8, quant_block=128) == \
+        layout.n_flat + layout.n_flat // 128 * 4
+    # the sidecar kwarg is ignored for non-quantized dtypes
+    assert layout.stream_bytes(jnp.bfloat16, quant_block=128) == \
+        layout.n_flat * 2
+    # sidecar flows into the auto-chunk footprint: int8 still beats f32
+    per_f32 = flatten.auto_cohort_chunk(layout, budget_bytes=1e7, k=1000)
+    per_int8 = flatten.auto_cohort_chunk(layout, budget_bytes=1e7, k=1000,
+                                         stream_dtype=jnp.int8,
+                                         quant_block=128)
+    assert per_int8 >= per_f32
+
+
 def test_auto_cohort_chunk_clamps_to_budget():
     layout = flatten.build_layout(_tree(), total_multiple=2048)
     per_client = layout.stream_bytes() * flatten.CLIENT_FOOTPRINT_MULTIPLIER

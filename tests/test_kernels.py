@@ -8,10 +8,13 @@ import pytest
 
 from repro.kernels.flash_attention.kernel import flash_attention_pallas
 from repro.kernels.flash_attention.ref import flash_attention_ref
-from repro.kernels.masked_agg.kernel import (masked_agg_acc_pallas,
+from repro.kernels.masked_agg.kernel import (masked_agg_acc_deq_pallas,
+                                             masked_agg_acc_pallas,
                                              masked_agg_pallas)
 from repro.kernels.masked_agg.ops import masked_agg_leaf, masked_agg_tree
-from repro.kernels.masked_agg.ref import masked_agg_acc_ref, masked_agg_ref
+from repro.kernels.masked_agg.ref import (masked_agg_acc_deq_ref,
+                                          masked_agg_acc_ref,
+                                          masked_agg_ref)
 from repro.kernels.rglru_scan.kernel import lru_scan_pallas
 from repro.kernels.rglru_scan.ref import lru_scan_ref
 
@@ -136,6 +139,87 @@ def test_masked_agg_acc_aliases_accumulator():
     np.testing.assert_allclose(np.asarray(out), 2.0)
     if jax.default_backend() != "cpu":   # CPU ignores donation
         assert acc.is_deleted()  # the donated input buffer was consumed
+
+
+@pytest.mark.parametrize("z,n,quant_block", [(4, 512, 128), (7, 2048, 64),
+                                             (3, 1024, 32)])
+def test_masked_agg_acc_deq_sweep(z, n, quant_block):
+    """Dequantizing accumulate (the quantized-upload fold's kernel):
+    interpret mode == the XLA ref, for int8 payload + per-group scales."""
+    from repro.core import comm
+    key = jax.random.PRNGKey(z * 13 + n)
+    ks = jax.random.split(key, 5)
+    acc = jax.random.normal(ks[0], (n,), jnp.float32)
+    x = jax.random.normal(ks[1], (z, n)) * 10.0
+    q, scales = comm.quantize(x, quant_block)
+    mask = jax.random.bernoulli(ks[2], 0.5, (n,))
+    w_m = jax.nn.softmax(jax.random.normal(ks[3], (z,)))
+    w_rest = jax.nn.softmax(jax.random.normal(ks[4], (z,)))
+    got = masked_agg_acc_deq_pallas(acc, q, scales, mask, w_m, w_rest,
+                                    quant_block=quant_block, block_n=512,
+                                    interpret=True)
+    want = masked_agg_acc_deq_ref(acc, q, scales, mask, w_m, w_rest,
+                                  quant_block=quant_block)
+    assert got.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_masked_agg_acc_deq_matches_dequant_then_fold():
+    """Fusing the dequant into the accumulate changes nothing numerically:
+    deq-fold == dequantize (f32 materialize) then plain acc fold."""
+    from repro.core import comm
+    key = jax.random.PRNGKey(21)
+    ks = jax.random.split(key, 4)
+    acc = jax.random.normal(ks[0], (512,), jnp.float32)
+    x = jax.random.normal(ks[1], (5, 512)) * 3.0
+    q, scales = comm.quantize(x, 128)
+    mask = jax.random.bernoulli(ks[2], 0.5, (512,))
+    w_m = jax.nn.softmax(jax.random.normal(ks[3], (5,)))
+    got = masked_agg_acc_deq_ref(acc, q, scales, mask, w_m, w_m,
+                                 quant_block=128)
+    want = masked_agg_acc_ref(acc, comm.dequantize(q, scales, 128), mask,
+                              w_m, w_m)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-7)
+
+
+def test_masked_agg_acc_deq_nan_scale_gating():
+    """A NaN device's scales are NaN (quantize of NaN rows): weight-0
+    gating must kill the row before the multiply on both paths."""
+    acc = jnp.array([1.0, 2.0] * 64)
+    q = jnp.ones((2, 128), jnp.int8)
+    scales = jnp.array([[jnp.nan], [2.0]])
+    mask = jnp.ones((128,), bool)
+    w = jnp.array([0.0, 1.0])
+    for fn in (lambda: masked_agg_acc_deq_ref(
+                   acc, q, scales, mask, w, w, quant_block=128),
+               lambda: masked_agg_acc_deq_pallas(
+                   acc, q, scales, mask, w, w, quant_block=128,
+                   block_n=128, interpret=True)):
+        got = np.asarray(fn())
+        assert np.isfinite(got).all()
+        np.testing.assert_allclose(got, np.asarray(acc) + 2.0)
+
+
+def test_masked_agg_acc_deq_validates_inputs():
+    acc = jnp.zeros((256,), jnp.float32)
+    q = jnp.zeros((2, 256), jnp.int8)
+    scales = jnp.zeros((2, 2))
+    mask = jnp.zeros((256,), bool)
+    w = jnp.ones((2,))
+    with pytest.raises(ValueError):   # non-f32 accumulator
+        masked_agg_acc_deq_pallas(acc.astype(jnp.bfloat16), q, scales,
+                                  mask, w, w, quant_block=128,
+                                  interpret=True)
+    with pytest.raises(ValueError):   # non-int8 payload
+        masked_agg_acc_deq_pallas(acc, q.astype(jnp.float32), scales,
+                                  mask, w, w, quant_block=128,
+                                  interpret=True)
+    with pytest.raises(ValueError):   # block_n not a group multiple
+        masked_agg_acc_deq_pallas(acc, q, scales, mask, w, w,
+                                  quant_block=96, block_n=128,
+                                  interpret=True)
 
 
 # ---------------------------------------------------------------------------
