@@ -1,0 +1,260 @@
+"""Async round engine: lag=0 parity gate, accuracy-vs-lag curves, and the
+simulated straggler round-clock speedup (the reason the engine exists).
+
+Three measurements, one ``BENCH_async.json``:
+
+1. **lag=0 parity (CI gate).**  The async engine run at ``lag=0`` must
+   reproduce the synchronous engine's server params **bit-for-bit**
+   (``max_abs_diff == 0.0``) through its own code path — version stack,
+   dynamic version select, float staleness weights.  This is the oracle
+   that says the async machinery adds no numerical drift before any lag
+   is turned on.
+
+2. **Accuracy vs lag.**  The full FedHeN protocol on the synthetic task
+   at ``lag`` in {0, 1, 2}: end loss/accuracy per lag, so the cost of
+   staleness is documented next to the speedup it buys.  Also records the
+   measured (version-aware) download bytes — stale-broadcast reuse shows
+   up as a per-round saving.
+
+3. **Straggler round-clock speedup (simulated).**  A discrete-event model
+   of the fold stream: chunk ``t`` of round ``r`` can start training as
+   soon as its (possibly stale) broadcast version exists — ``close(r) =
+   max_t(close(r - 1 - staleness(t)) + time(t))``, with the true
+   ``fold_schedule``.  One chunk is a straggler (the big-architecture
+   cohort, ``STRAGGLER_FACTOR`` x slower).  Synchronously the straggler
+   gates every round; with lag covering its position it trains against
+   the previous round's broadcast while the server folds ahead, halving
+   the steady-state period.  Position matters below ``lag < F``:
+   ``straggler-first`` (slow chunk at the head of the stream, where the
+   lag window sits) overlaps, ``straggler-last`` does not — both are
+   reported.
+
+Run as a script to emit ``BENCH_async.json`` and exit nonzero on a gate
+failure (the CI smoke): ``python benchmarks/async_rounds.py --fast``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FedConfig, LayerSpec, ModelConfig
+from repro.core import async_rounds
+from repro.core.adapters import LMAdapter
+from repro.core.federated import FederatedTrainer, chunk_geometry
+from repro.data.federated import iid_split
+from repro.data.synthetic import synthetic_lm
+
+LAGS = (0, 1, 2)
+
+CFG = ModelConfig(name="attn4", n_layers=4, d_model=64, n_heads=4,
+                  n_kv_heads=2, d_ff=128, vocab_size=256,
+                  pattern=(LayerSpec("attn"),), exit_layer=2,
+                  compute_dtype="float32")
+
+# straggler model: one chunk this many times slower than the rest (the
+# complex-architecture cohort members of a heterogeneous round)
+STRAGGLER_FACTOR = 4.0
+SIM_ROUNDS = 64
+
+# gates (script exit code, enforced in CI)
+GATE_PARITY_MAX_ABS_DIFF = 0.0      # bit-for-bit, not "close"
+GATE_MIN_OVERLAP_SPEEDUP = 1.5      # straggler-first speedup at lag >= 1
+
+
+def make_trainer(lag: int, *, rounds: int, seed: int = 0
+                 ) -> FederatedTrainer:
+    fed = FedConfig(n_devices=8, n_simple=4, participation=1.0,
+                    rounds=rounds, local_epochs=1, lr=0.1, batch_size=8,
+                    algorithm="fedhen", seed=seed, cohort_chunk=2,
+                    async_lag=lag)
+    data = synthetic_lm(fed.n_devices * 16, 32, CFG.vocab_size, seed=1)
+    shards = [{"tokens": jnp.asarray(s["tokens"])}
+              for s in iid_split(data, fed.n_devices, seed=2)]
+    return FederatedTrainer(LMAdapter(CFG), fed, shards)
+
+
+# ---------------------------------------------------------------------------
+# 1. lag=0 parity
+# ---------------------------------------------------------------------------
+
+def lag0_parity_max_abs_diff(rounds: int) -> float:
+    """Run the synchronous engine and the async engine at lag=0 side by
+    side; return the max absolute server-param difference (must be 0.0)."""
+    sync = make_trainer(0, rounds=rounds)
+    tr = make_trainer(0, rounds=rounds)
+    eng = async_rounds.AsyncRoundEngine(tr, lag=0)
+    for _ in range(rounds):
+        sync.run_round()
+        eng.run_round()
+    return max(float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                     - b.astype(jnp.float32))))
+               for a, b in zip(jax.tree.leaves(sync.server.complex),
+                               jax.tree.leaves(tr.server.complex)))
+
+
+# ---------------------------------------------------------------------------
+# 2. Accuracy vs lag
+# ---------------------------------------------------------------------------
+
+def run_lag_point(lag: int, *, rounds: int) -> Dict:
+    trainer = make_trainer(lag, rounds=rounds)
+    test = synthetic_lm(64, 32, CFG.vocab_size, seed=999)
+    test_batch = {"tokens": jnp.asarray(test["tokens"])}
+    t0 = time.time()
+    loss = float("nan")
+    for _ in range(rounds):
+        loss = trainer.run_round()["loss_complex"]
+    dt = time.time() - t0
+    ev = trainer.evaluate(test_batch)
+    eng = trainer.async_engine
+    # the real fold-stream length, also for the lag=0 (sync-engine) row —
+    # all rows must simulate the same stream or their speedups are not
+    # comparable
+    folds = (eng.folds_per_round if eng else
+             chunk_geometry(trainer.k_simple, trainer.cohort_chunk)[1]
+             + chunk_geometry(trainer.k_complex, trainer.cohort_chunk)[1])
+    return {
+        "label": f"lag{lag}",
+        "lag": lag,
+        "rounds": rounds,
+        "folds_per_round": folds,
+        "n_versions": (eng.n_versions if eng else 1),
+        "loss_complex": loss,
+        "acc_simple": ev["acc_simple"],
+        "acc_complex": ev["acc_complex"],
+        "mbytes_down": ev["mbytes_down"],
+        "mbytes_up": ev["mbytes_up"],
+        "us_per_round": dt / rounds * 1e6,
+    }
+
+
+# ---------------------------------------------------------------------------
+# 3. Straggler round-clock simulation
+# ---------------------------------------------------------------------------
+
+def simulate_round_period(chunk_times: List[float], lag: int,
+                          rounds: int = SIM_ROUNDS) -> float:
+    """Steady-state round period of the fold stream under bounded lag.
+
+    ``close(r) = max_t(close(r - 1 - s_t) + time_t)`` with ``s_t`` from
+    the engine's real ``fold_schedule`` (and closes kept monotone: the
+    server folds the stream in order).  Returns the mean period over the
+    second half (transients discarded).
+    """
+    n_folds = len(chunk_times)
+    close: List[float] = []
+
+    def closed_at(r: int) -> float:
+        return 0.0 if r < 0 else close[r]
+
+    for r in range(rounds):
+        s = async_rounds.fold_schedule(n_folds, lag, r)
+        t_close = max(closed_at(r - 1 - int(s[i])) + chunk_times[i]
+                      for i in range(n_folds))
+        close.append(max(t_close, closed_at(r - 1)))
+    half = rounds // 2
+    return (close[rounds - 1] - close[half - 1]) / (rounds - half)
+
+
+def straggler_speedups(lag: int, n_folds: int) -> Dict[str, float]:
+    """Round-clock speedup vs the synchronous engine with ONE straggler
+    chunk, placed first vs last in the fold stream."""
+    fast, slow = 1.0, STRAGGLER_FACTOR
+    first = [slow] + [fast] * (n_folds - 1)
+    last = [fast] * (n_folds - 1) + [slow]
+    out = {}
+    for name, times in (("straggler_first", first),
+                        ("straggler_last", last)):
+        sync_p = simulate_round_period(times, 0)
+        async_p = simulate_round_period(times, lag)
+        out[f"speedup_{name}"] = sync_p / async_p
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Driver + gates
+# ---------------------------------------------------------------------------
+
+def check_gates(payload: Dict) -> List[str]:
+    failures = []
+    parity = payload["lag0_parity_max_abs_diff"]
+    if parity > GATE_PARITY_MAX_ABS_DIFF:
+        failures.append(f"lag=0 parity broken: async engine diverges from "
+                        f"the synchronous engine by {parity:g} (must be "
+                        f"bit-for-bit)")
+    for r in payload["rows"]:
+        if not np.isfinite(r["loss_complex"]):
+            failures.append(f"{r['label']}: non-finite end loss")
+        if r["lag"] >= 1 and \
+                r["speedup_straggler_first"] < GATE_MIN_OVERLAP_SPEEDUP:
+            failures.append(
+                f"{r['label']}: straggler-first round-clock speedup "
+                f"{r['speedup_straggler_first']:.2f} < "
+                f"{GATE_MIN_OVERLAP_SPEEDUP}")
+        if r["speedup_straggler_last"] < 1.0 - 1e-9:
+            failures.append(f"{r['label']}: straggler-last speedup "
+                            f"{r['speedup_straggler_last']:.2f} < 1 "
+                            f"(async made the round clock WORSE)")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="4 rounds per lag point (CI smoke)")
+    ap.add_argument("--out", default="BENCH_async.json")
+    args = ap.parse_args(argv)
+
+    rounds = 4 if args.fast else 12
+    parity = lag0_parity_max_abs_diff(min(rounds, 3))
+    rows = []
+    for lag in LAGS:
+        row = run_lag_point(lag, rounds=rounds)
+        row.update(straggler_speedups(lag,
+                                      n_folds=row["folds_per_round"]))
+        rows.append(row)
+    base = rows[0]
+    for row in rows:
+        row["loss_delta_vs_lag0"] = row["loss_complex"] - base["loss_complex"]
+        row["acc_simple_delta_vs_lag0"] = (row["acc_simple"]
+                                           - base["acc_simple"])
+
+    payload = {
+        "bench": "async_rounds",
+        "backend": jax.default_backend(),
+        "straggler_factor": STRAGGLER_FACTOR,
+        "gate_parity_max_abs_diff": GATE_PARITY_MAX_ABS_DIFF,
+        "gate_min_overlap_speedup": GATE_MIN_OVERLAP_SPEEDUP,
+        "lag0_parity_max_abs_diff": parity,
+        "rows": rows,
+    }
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=1)
+
+    print(f"lag=0 parity max |diff|: {parity:g} (gate: == 0)")
+    for r in rows:
+        print(f"{r['label']:>5}: loss {r['loss_complex']:.4f} "
+              f"(d={r['loss_delta_vs_lag0']:+.4f}), "
+              f"acc_simple {r['acc_simple']:.4f}, "
+              f"down {r['mbytes_down']:.3f} MB, "
+              f"speedup first/last "
+              f"{r['speedup_straggler_first']:.2f}x/"
+              f"{r['speedup_straggler_last']:.2f}x")
+
+    failures = check_gates(payload)
+    if failures:
+        print(f"REGRESSION: {failures} (see {args.out})")
+        return 1
+    print(f"ok — wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,7 +1,7 @@
 """Bench-trend gate: diff a freshly produced BENCH json against the
 committed baseline and fail on a regression in the gated metrics.
 
-The two bench files this repo commits are trend-gated in CI:
+The bench files this repo commits are trend-gated in CI:
 
 * ``BENCH_streaming.json`` (benchmarks/streaming_cohort.py) — rows keyed
   by ``label``; gated metrics are the quantities the engine owns: compiled
@@ -11,6 +11,10 @@ The two bench files this repo commits are trend-gated in CI:
   ``(arch, comm_dtype)``; gated metrics are the wire sizes (bytes/round,
   down + up) and the savings ratio vs f32.  Accuracy is recorded but NOT
   gated (4 synthetic rounds are seed noise).
+* ``BENCH_async.json`` (benchmarks/async_rounds.py) — rows keyed by
+  ``label`` (``lag0``/``lag1``/``lag2``); gated metrics are the simulated
+  straggler round-clock speedups (must not drop).  The bit-for-bit lag=0
+  parity is gated by that script's own exit code, not the trend diff.
 
 A metric regresses when the fresh value is worse than baseline by more
 than ``--tolerance`` (default 10%): "worse" is *larger* for cost metrics
@@ -39,6 +43,11 @@ GATES = {
         "key": ("arch", "comm_dtype"),
         "metrics": {"bytes_per_round": "up", "bytes_down_per_round": "up",
                     "bytes_up_per_round": "up", "ratio_vs_f32": "down"},
+    },
+    "async_rounds": {
+        "key": ("label",),
+        "metrics": {"speedup_straggler_first": "down",
+                    "speedup_straggler_last": "down"},
     },
 }
 

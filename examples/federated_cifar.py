@@ -15,7 +15,13 @@ from repro.launch.train import main
 
 if __name__ == "__main__":
     rounds = sys.argv[1] if len(sys.argv) > 1 else "3"
+    # current driver surface (see launch/train.py --help): the flat-buffer
+    # fold streamed in chunks of 2 clients, the f32 (paper-accounting)
+    # wire, synchronous rounds.  Swap "--comm-dtype" to int8 for the
+    # quantized wire, or add "--async-lag 1" for bounded-lag async rounds.
     main(["--model", "resnet", "--algorithm", "fedhen",
           "--rounds", rounds, "--clients", "8", "--participation", "0.25",
           "--local-epochs", "1", "--batch-size", "32",
-          "--data-points", "1024", "--non-iid", "--eval-every", "1"])
+          "--data-points", "1024", "--non-iid", "--eval-every", "1",
+          "--cohort-chunk", "2", "--agg-engine", "flat",
+          "--comm-dtype", "float32", "--async-lag", "0"])

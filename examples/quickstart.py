@@ -22,11 +22,19 @@ CFG = ModelConfig(n_layers=4, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
 ROUNDS = 36
 TARGET = 0.15   # held-out token accuracy (chain optimum ~0.75)
 
+# Current engine surface (docs/ARCHITECTURE.md maps every knob): stream
+# the cohort in chunks of 2 clients through the flat-buffer fold, over
+# the paper-accounting f32 wire, fully synchronous rounds.  Try
+# comm_dtype="int8" for ~3.9x smaller payloads, or async_lag=1 to let
+# the first chunk overlap the previous round's server fold.
+ENGINE = dict(cohort_chunk=2, agg_engine="flat", comm_dtype="float32",
+              async_lag=0)
+
 
 def run(algorithm: str):
     fed = FedConfig(n_devices=20, n_simple=10, participation=0.2,
                     rounds=ROUNDS, local_epochs=1, lr=0.1, batch_size=8,
-                    algorithm=algorithm, seed=0)
+                    algorithm=algorithm, seed=0, **ENGINE)
     data = synthetic_lm(400, 32, CFG.vocab_size, seed=1)
     shards = [
         {"tokens": jnp.asarray(s["tokens"])}

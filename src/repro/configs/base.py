@@ -346,6 +346,21 @@ class FedConfig:
     # Must divide the flat layout's lane alignment (128) so scale groups
     # never cross a LeafSlot boundary.
     quant_block: int = 128
+    # Asynchronous round engine (core/async_rounds.py): bounded staleness
+    # lag measured in chunk folds.  Chunk ``i`` of a round trains on the
+    # server params published at fold ``i - async_lag`` of the global fold
+    # stream — the first ``async_lag`` chunks of every round overlap the
+    # previous round's server fold and therefore train on a stale,
+    # version-tagged broadcast.  0 = fully synchronous (today's engine,
+    # bit-for-bit).
+    async_lag: int = 0
+    # Staleness weighting scheme for stale uploads: "poly" applies the
+    # FedAsync polynomial decay 1/(1+s)^async_decay (s = staleness in
+    # rounds) to the client's validity weight before the masked fold;
+    # "none" folds stale uploads at full weight.
+    async_staleness: str = "poly"
+    # Exponent a of the polynomial staleness decay 1/(1+s)^a.
+    async_decay: float = 0.5
 
     def __post_init__(self):
         if self.agg_engine not in ("flat", "tree"):
@@ -366,3 +381,12 @@ class FedConfig:
         if self.comm_dtype == "int8" and self.agg_engine != "flat":
             raise ValueError("comm_dtype=int8 requires agg_engine='flat' "
                              "(the dequantizing fold is a flat-buffer op)")
+        if self.async_lag < 0:
+            raise ValueError("async_lag must be >= 0 (folds of broadcast "
+                             f"staleness), got {self.async_lag}")
+        if self.async_staleness not in ("poly", "none"):
+            raise ValueError(f"async_staleness must be 'poly' or 'none', "
+                             f"got {self.async_staleness!r}")
+        if self.async_decay < 0:
+            raise ValueError(f"async_decay must be >= 0, "
+                             f"got {self.async_decay}")

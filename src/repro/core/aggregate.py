@@ -38,6 +38,16 @@ plus two scalar weight totals; the division happens once at finalize, so
 server memory is O(chunk) and the result matches the one-shot path up to
 float summation order.
 
+**Weight contract.**  ``valid`` is a per-client coefficient, not just a
+bool: a bool marks plain validity (NaN exclusion, padding), while a float
+carries validity *times* any per-client coefficient — the asynchronous
+engine (``core/async_rounds.py``) multiplies its staleness decay
+``1/(1+s)^a`` into it, so staleness weighting rides the exact same masked
+weight path as NaN/padding exclusion and needs no second code path.  A
+weight of 0 gates the client's values before the multiply on every path
+(a NaN device at weight 0 can never poison the sums), and all-1 float
+weights are bit-identical to bool validity.
+
 The hot path — a weighted masked sum over the cohort axis — is exactly the
 ``masked_agg`` Pallas kernel's contract; the folds dispatch to it on TPU
 via ``kernels/masked_agg/ops.py``, with the XLA reference as the CPU
@@ -139,10 +149,12 @@ def _chunk_weights(is_simple: jax.Array, valid: jax.Array,
                    algorithm: str) -> Tuple[jax.Array, jax.Array]:
     """Raw (unnormalized) per-client weights of one chunk.
 
-    ``w_in`` weights the inside-M accumulator: every valid device for
-    fedhen/noside (Alg. 1 ln. 18), simple devices only for decouple.
-    ``w_out`` weights outside M: complex devices only (ln. 22), for all
-    three algorithms.
+    ``valid`` may be bool (plain validity) or float (validity x any
+    per-client coefficient, e.g. the async engine's staleness decay) —
+    see the module's weight contract.  ``w_in`` weights the inside-M
+    accumulator: every valid device for fedhen/noside (Alg. 1 ln. 18),
+    simple devices only for decouple.  ``w_out`` weights outside M:
+    complex devices only (ln. 22), for all three algorithms.
     """
     if algorithm not in ALGORITHMS:
         raise ValueError(algorithm)
@@ -188,10 +200,18 @@ def _layout_for(tree: Tree, layout, block_n: int, *, stacked: bool = False):
 def streaming_init(params_like: Tree, algorithm: str, *,
                    layout: Optional[flatten.FlatLayout] = None,
                    block_n: int = 2048) -> StreamState:
-    """Zero flat accumulators for one (unstacked) complex model.
+    """Zero flat accumulators for one round of streaming aggregation.
 
-    ``layout``/``block_n`` must match the subsequent folds (the trainer
-    passes its one static layout everywhere)."""
+    Args:
+      params_like: ONE (unstacked) complex model tree — only shapes are
+        read, to size the flat accumulator.
+      algorithm: one of :data:`ALGORITHMS` (decouple allocates the second
+        accumulator).
+      layout / block_n: must match the subsequent folds (the trainer
+        passes its one static layout everywhere).
+
+    Returns: a :class:`StreamState` of f32 zeros (``(n_flat,)`` acc(s) +
+    two scalar weight totals)."""
     if algorithm not in ALGORITHMS:
         raise ValueError(algorithm)
     layout = _layout_for(params_like, layout, block_n)
@@ -209,7 +229,23 @@ def streaming_fold(state: StreamState, chunk: Tree, is_simple: jax.Array,
                    stream_dtype=jnp.float32,
                    wire: Optional[comm.WireSpec] = None,
                    force_pallas_interpret: bool = False) -> StreamState:
-    """Fold one stacked chunk (z, ...) of client models into the flat sums.
+    """Fold one stacked chunk of client models into the flat sums.
+
+    Args:
+      state: the running :class:`StreamState` (from ``streaming_init`` or
+        a previous fold).
+      chunk: stacked client models, leaves ``(Z, *shape)``.
+      is_simple: ``(Z,)`` bool — population membership per client.
+      valid: ``(Z,)`` bool validity, or f32 per-client weights (validity x
+        staleness coefficient — the async engine's path; see the module
+        weight contract).
+      mask: index-set-M mask tree (ignored when ``flat_mask`` is given on
+        the kernel path).
+      algorithm: one of :data:`ALGORITHMS`.
+      layout / flat_mask / block_n / stream_dtype / wire: the trainer's
+        static fold configuration — must match across init/fold/finalize.
+
+    Returns: the updated state (same shapes; ``acc`` stays f32).
 
     On the kernel path (TPU, or interpret mode in tests) the chunk is
     packed into one ``(Z, n_flat)`` buffer (``stream_dtype``; bf16 halves
@@ -333,7 +369,15 @@ def streaming_finalize(state: StreamState, mask: Tree, template: Tree, *,
                        block_n: int = 2048) -> Tuple[Tree, Optional[Tree]]:
     """Normalize the flat sums, unpack to trees, cast to ``template`` dtypes.
 
-    Returns ``(new_complex, new_simple_host)``; the host is ``None`` except
+    Args:
+      state: the fully folded :class:`StreamState`.
+      mask: index-set-M mask tree (``flat_mask`` preferred when given).
+      template: tree providing the output leaf dtypes (shapes come from
+        the layout; ``ShapeDtypeStruct`` leaves are fine).
+      algorithm / layout / flat_mask / block_n: the same static fold
+        configuration used by init/fold.
+
+    Returns: ``(new_complex, new_simple_host)``; the host is ``None`` except
     for decouple (matching ``ServerState``).  A group with zero total weight
     yields zeros, like ``_norm_weights`` in the one-shot path.
     """

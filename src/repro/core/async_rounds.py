@@ -1,0 +1,341 @@
+"""Asynchronous round engine: bounded-lag chunk streaming with
+staleness-weighted folds (FedAsync/FedBuff semantics over the flat-buffer
+stack).
+
+FedHeN trains devices of different complexities jointly, which makes
+stragglers structural: the big-architecture cohort members gate the round
+clock for everyone.  This module removes that gate.  The synchronous
+engine (``core/federated.py``) broadcasts the round's server params, scans
+the cohort chunk by chunk, and only publishes a new model once *every*
+chunk has folded — so the slowest chunk sets the round period.  The async
+engine lets chunk training **overlap the server fold across rounds**:
+
+**Bounded-lag contract.**  Let ``F`` be the number of chunk folds per
+round (simple chunks first, then complex — the same stream order as the
+synchronous scan) and ``t`` a chunk's position in that stream.  With
+``FedConfig.async_lag = L``, chunk ``t`` of round ``r`` trains on the
+server params published at global fold ``r*F + t - L`` — the newest
+*round* model available at that fold time.  Concretely the chunk's
+broadcast is ``staleness = ceil((L - t) / F)`` rounds old (clamped to
+``[0, r]``): the first ``L`` chunks of every round started training
+before the previous round's fold finished, so they carry a one-round-
+(or more-)stale, version-tagged broadcast.  ``L = 0`` makes every chunk
+train on the fresh round broadcast — **bit-for-bit the synchronous
+engine** (the parity oracle, test- and CI-enforced).
+
+**Version-tagged broadcasts.**  The engine keeps the last
+``ceil(L / F) + 1`` published server models as one stacked ``(V, n_flat)``
+flat buffer (``core.flatten.pack``), rolled once per round.  Inside the
+round jit the whole stack crosses the wire once
+(``comm.encode``/``decode`` batched over ``V`` — identical bits to the
+synchronous ``broadcast_roundtrip`` per version) and each chunk selects
+its version with one ``lax.dynamic_index_in_dim``.  Download accounting
+uses ``comm.VersionCache``: a client that already holds the version its
+chunk trains on is not billed again, so measured bytes stay truthful
+under stale-broadcast reuse.
+
+**Staleness-weighted folds.**  A stale upload moved away from a model the
+server has since replaced; folding it at full weight drags the average
+backwards.  Uploads are folded with the FedAsync polynomial decay
+``w = 1 / (1 + s)^a`` (``s`` = staleness in rounds,
+``a = FedConfig.async_decay``; ``FedConfig.async_staleness = "none"``
+disables it).  The coefficient multiplies the client's validity weight
+and enters ``aggregate.streaming_fold`` through the exact same masked
+weight path as NaN-device/padding exclusion — no second aggregation code
+path, and weight-0 devices stay gated before the multiply on every
+backend.  Fresh chunks (``s = 0``) fold at weight exactly 1.0, which is
+why the ``L = 0`` parity is bit-exact rather than merely close.
+
+The engine SHARES the synchronous machinery rather than mirroring it:
+the same ``make_client_trainer``, the same ``aggregate.make_engine`` fold
+triple (flat or tree, any wire — int8 uploads still fold through the
+dequantizing ``masked_agg`` accumulate), and the ONE chunk-stream scan
+``federated.stream_population`` (the async extras — per-chunk version
+index and staleness coefficient — are optional arguments of that shared
+scan, so the two engines cannot drift).  Chunk padding with weight-0
+clients and per-client RNG derivation are therefore identical by
+construction: a round's result at a given schedule is invariant to
+chunking up to float summation order, exactly like the synchronous
+engine.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import aggregate, comm, federated, flatten
+
+STALENESS_SCHEMES = ("poly", "none")
+
+
+def staleness_weight(staleness, *, scheme: str = "poly",
+                     decay: float = 0.5) -> jax.Array:
+    """Fold coefficient for an upload that trained on a stale broadcast.
+
+    Args:
+      staleness: scalar or array of staleness values ``s`` (broadcast
+        versions behind the current one, in rounds; 0 = fresh).
+      scheme: ``"poly"`` — the FedAsync polynomial decay
+        ``1 / (1 + s)^decay``; ``"none"`` — constant 1 (staleness
+        ignored).
+      decay: the polynomial exponent ``a`` (>= 0).
+
+    Returns: f32 weights of ``staleness``'s shape, exactly 1.0 at
+    ``s = 0`` for every scheme (the bit-for-bit lag=0 parity relies on
+    this).
+    """
+    s = jnp.asarray(staleness, jnp.float32)
+    if scheme == "none":
+        return jnp.ones_like(s)
+    if scheme == "poly":
+        return (1.0 + s) ** jnp.float32(-decay)
+    raise ValueError(f"unknown staleness scheme {scheme!r} "
+                     f"(one of {STALENESS_SCHEMES})")
+
+
+def fold_schedule(n_folds: int, lag: int, round_index: int) -> np.ndarray:
+    """Per-chunk broadcast staleness of one round's fold stream.
+
+    Args:
+      n_folds: chunk folds per round ``F`` (simple + complex populations).
+      lag: ``FedConfig.async_lag`` — folds of bounded staleness ``L``.
+      round_index: the round ``r`` being scheduled (clamps staleness so no
+        chunk can train on a pre-initialization model).
+
+    Returns: int array of shape ``(n_folds,)``: position ``t`` trains on
+    the round broadcast published ``ceil((L - t) / F)`` rounds ago,
+    clamped to ``[0, round_index]``.  All zeros when ``lag = 0``.
+    """
+    t = np.arange(n_folds)
+    d = -((t - lag) // n_folds)          # ceil((lag - t) / n_folds)
+    return np.minimum(np.maximum(d, 0), round_index)
+
+
+class AsyncRoundEngine:
+    """Drives asynchronous rounds for a :class:`~repro.core.federated.
+    FederatedTrainer` (which delegates ``run_round`` here when
+    ``FedConfig.async_lag > 0``).
+
+    The engine owns the version stack, the staleness schedule, the async
+    round jit, and the version-aware byte accounting; server state still
+    lives on the trainer, so checkpointing and evaluation are unchanged.
+    Construct directly with an explicit ``lag`` to run the async code
+    path at a lag the trainer's config would not choose — the lag=0
+    parity tests and the CI benchmark gate do exactly that.
+    """
+
+    def __init__(self, trainer, *, lag: Optional[int] = None,
+                 scheme: Optional[str] = None,
+                 decay: Optional[float] = None):
+        fed = trainer.fed
+        self.trainer = trainer
+        self.lag = fed.async_lag if lag is None else lag
+        self.scheme = fed.async_staleness if scheme is None else scheme
+        self.decay = fed.async_decay if decay is None else decay
+        if self.lag < 0:
+            raise ValueError(f"lag must be >= 0, got {self.lag}")
+        if self.scheme not in STALENESS_SCHEMES:
+            raise ValueError(f"unknown staleness scheme {self.scheme!r}")
+        self.algo = fed.algorithm
+        self.layout = trainer.layout
+        self.wire = trainer.wire
+        # static chunk geometry — the synchronous scan's exact rule
+        self.chunk_s, self.n_chunks_s = federated.chunk_geometry(
+            trainer.k_simple, trainer.cohort_chunk)
+        self.chunk_c, self.n_chunks_c = federated.chunk_geometry(
+            trainer.k_complex, trainer.cohort_chunk)
+        self.folds_per_round = self.n_chunks_s + self.n_chunks_c
+        # version stack depth: deepest offset any chunk can reach, plus
+        # the fresh slot — static, so the round jit never retraces
+        self.n_versions = -(-self.lag // self.folds_per_round) + 1
+        self._reset_versions()
+        # per-client one-way wire cost: the trainer's numbers, not a
+        # recomputation — sync and async billing share one source
+        self._per_simple = trainer.per_simple_bytes
+        self._per_complex = trainer.per_complex_bytes
+        self.last_bytes_down = 0.0
+        self.last_bytes_up = 0.0
+        donate = (0, 1) if jax.default_backend() != "cpu" else ()
+        self._round_fn = jax.jit(self._make_round_fn(),
+                                 donate_argnums=donate)
+
+    # -- version stack -------------------------------------------------------
+
+    def _reset_versions(self):
+        """(Re)seed the version stack and download ledger from the
+        trainer's CURRENT server state.
+
+        Called at construction and whenever ``trainer.server`` is
+        replaced from outside the engine (checkpoint restore in
+        ``launch/train.py --resume``): the replaced state's history is
+        unknown, so every slot becomes the current model — the same
+        pre-history semantics a fresh engine starts with — and the
+        download cache is cleared (clients' cached version tags referred
+        to the discarded history)."""
+        tr = self.trainer
+        flat = flatten.pack(self.layout, tr.server.complex)
+        self.versions = jnp.tile(flat[None], (self.n_versions, 1))
+        self.versions_host = None
+        if self.algo == "decouple":
+            host = flatten.pack(self.layout, tr.server.simple_host)
+            self.versions_host = jnp.tile(host[None], (self.n_versions, 1))
+        self.version_cache = comm.VersionCache()
+        self._published_server = tr.server
+
+    # -- schedule ------------------------------------------------------------
+
+    def schedule(self, round_index: int) -> Tuple[np.ndarray, np.ndarray]:
+        """(staleness_simple, staleness_complex) for one round — the fold
+        stream split back into the two population scans."""
+        s_all = fold_schedule(self.folds_per_round, self.lag, round_index)
+        return s_all[:self.n_chunks_s], s_all[self.n_chunks_s:]
+
+    # -- the jitted async round ----------------------------------------------
+
+    def _make_round_fn(self):
+        tr = self.trainer
+        adapter, fed, mask = tr.adapter, tr.fed, tr.mask
+        algo = self.algo
+        train_simple = federated.make_client_trainer(adapter.loss_simple,
+                                                     fed)
+        complex_loss = (adapter.loss_side if algo == "fedhen"
+                        else adapter.loss_complex)
+        train_complex = federated.make_client_trainer(complex_loss, fed)
+        layout, wire = self.layout, self.wire
+        stream_dtype = jnp.dtype(fed.agg_stream_dtype)
+        k_simple, k_complex = tr.k_simple, tr.k_complex
+        # finalize only reads dtypes from the template — static structs
+        # keep the server tree out of the round's argument list
+        template = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+            tr.server.complex)
+
+        def make_agg(flat_mask):
+            return aggregate.make_engine(
+                fed.agg_engine, algorithm=algo, mask=mask, layout=layout,
+                flat_mask=flat_mask, block_n=fed.agg_block_n,
+                stream_dtype=stream_dtype, wire=wire)
+
+        def decode_versions(versions):
+            """(V, n_flat) packed stack -> stacked broadcast trees, each
+            version through the same wire trip a synchronous broadcast
+            takes (identity wires skip the encode, like the sync path)."""
+            if not wire.is_identity:
+                versions = comm.decode(wire, comm.encode(wire, versions))
+            return flatten.unpack_stacked(layout, versions)
+
+        def version_select(bcasts):
+            """``get_src`` for the shared chunk scan: one dynamic index
+            into the stacked broadcast trees per chunk."""
+            return lambda idx: jax.tree.map(
+                lambda x: jax.lax.dynamic_index_in_dim(
+                    x, idx, 0, keepdims=False), bcasts)
+
+        def round_fn(versions, versions_host, data_s, data_c,
+                     rng, flat_mask, idx_s, w_s, idx_c, w_c):
+            agg_init, agg_fold, agg_finalize = make_agg(flat_mask)
+            rs, rc = jax.random.split(rng)
+            bcasts_c = decode_versions(versions)
+            bcasts_s = (decode_versions(versions_host)
+                        if algo == "decouple" else bcasts_c)
+            state = agg_init(template)
+            state, loss_s, valid_s = federated.stream_population(
+                state, version_select(bcasts_s), train_simple, data_s, rs,
+                agg_fold, k=k_simple, chunk=self.chunk_s,
+                n_chunks=self.n_chunks_s, is_simple_flag=True,
+                skip_nan=fed.skip_nan_devices,
+                version_idx=idx_s, staleness_w=w_s)
+            state, loss_c, valid_c = federated.stream_population(
+                state, version_select(bcasts_c), train_complex, data_c, rc,
+                agg_fold, k=k_complex, chunk=self.chunk_c,
+                n_chunks=self.n_chunks_c, is_simple_flag=False,
+                skip_nan=fed.skip_nan_devices,
+                version_idx=idx_c, staleness_w=w_c)
+            new_complex, new_host = agg_finalize(state, template=template)
+            # publish: roll the new round model into the version stack
+            new_versions = jnp.concatenate(
+                [flatten.pack(layout, new_complex)[None], versions[:-1]],
+                axis=0)
+            new_versions_host = None
+            if algo == "decouple":
+                new_versions_host = jnp.concatenate(
+                    [flatten.pack(layout, new_host)[None],
+                     versions_host[:-1]], axis=0)
+            metrics = {"loss_simple": loss_s, "loss_complex": loss_c,
+                       "n_valid": valid_s + valid_c}
+            return (new_complex, new_host, new_versions,
+                    new_versions_host, metrics)
+
+        return round_fn
+
+    # -- byte accounting (version-aware) -------------------------------------
+
+    def _bill_download(self, simple_ids, complex_ids, s_s, s_c,
+                       round_index: int) -> float:
+        """Measured download of one round: each real client fetches the
+        version its chunk trains on — billed once per (client, version)
+        through the :class:`~repro.core.comm.VersionCache`, so cached
+        stale broadcasts cost 0.  Padding slots wrap real clients that
+        already fetched this round, so padding is never billed (same
+        contract as the synchronous accounting)."""
+        down = 0
+        for ids, staleness, chunk, nbytes in (
+                (simple_ids, s_s, self.chunk_s, self._per_simple),
+                (complex_ids, s_c, self.chunk_c, self._per_complex)):
+            for pos, cid in enumerate(ids):
+                tag = round_index - int(staleness[pos // chunk])
+                down += self.version_cache.bill(int(cid), tag, nbytes)
+        return float(down)
+
+    # -- public API ----------------------------------------------------------
+
+    def _round_args(self):
+        """One round's concrete argument tuple (shared by run/lower)."""
+        tr = self.trainer
+        if tr.server is not self._published_server:
+            # the server state was replaced from outside (checkpoint
+            # restore): the version stack must follow it, or every chunk
+            # would keep training on the discarded pre-restore broadcast
+            self._reset_versions()
+        r = tr.server.round
+        s_s, s_c = self.schedule(r)
+        w_s = staleness_weight(s_s, scheme=self.scheme, decay=self.decay)
+        w_c = staleness_weight(s_c, scheme=self.scheme, decay=self.decay)
+        simple_ids, complex_ids = tr._sample_cohort()
+        key = jax.random.PRNGKey(tr.fed.seed * 100003 + r)
+        args = (self.versions, self.versions_host,
+                tr._gather(simple_ids), tr._gather(complex_ids), key,
+                tr._flat_mask_arg(), jnp.asarray(s_s, jnp.int32), w_s,
+                jnp.asarray(s_c, jnp.int32), w_c)
+        return args, (simple_ids, complex_ids, s_s, s_c, r)
+
+    def lower_round(self):
+        """AOT-lower the async round jit with this trainer's shapes (the
+        async mirror of ``FederatedTrainer.lower_round``; consumes one
+        cohort sample)."""
+        args, _ = self._round_args()
+        return self._round_fn.lower(*args)
+
+    def run_round(self):
+        """One async round: schedule staleness, train + fold the chunk
+        stream, publish the new version, update the trainer's server
+        state and measured byte totals."""
+        tr = self.trainer
+        args, (simple_ids, complex_ids, s_s, s_c, r) = self._round_args()
+        (new_complex, new_host, self.versions, self.versions_host,
+         metrics) = self._round_fn(*args)
+        tr.server = federated.ServerState(
+            complex=new_complex, simple_host=new_host, round=r + 1)
+        self._published_server = tr.server
+        down = self._bill_download(simple_ids, complex_ids, s_s, s_c, r)
+        up = float(tr.k_simple * self._per_simple
+                   + tr.k_complex * self._per_complex)
+        self.last_bytes_down, self.last_bytes_up = down, up
+        tr.total_bytes_down += down
+        tr.total_bytes_up += up
+        tr.total_bytes += down + up
+        return {k: float(v) for k, v in metrics.items()}

@@ -35,13 +35,21 @@ the trainer's per-round numbers are the encoder's actual output — payload
 *and* sidecar — for the true (compact) element counts.  Alignment padding
 is a local layout artifact the sender strips (offsets are static on both
 ends), so it is never billed to the wire.
+
+Under the asynchronous round engine (``core/async_rounds.py``) broadcasts
+are **version-tagged**: a chunk that trains on a stale version its clients
+already hold does not re-download it.  :class:`VersionCache` keeps that
+accounting truthful — one download is billed per (client, version), so the
+measured per-round download shrinks exactly when a cached stale broadcast
+is reused, and degenerates to the synchronous numbers at ``async_lag=0``
+(every round publishes a fresh version, so every client re-downloads).
 """
 
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, NamedTuple, Optional, Tuple
+from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -109,8 +117,16 @@ def buffer_nbytes(buf: WireBuffer) -> int:
 # ---------------------------------------------------------------------------
 
 def quantize(x: jax.Array, quant_block: int) -> Tuple[jax.Array, jax.Array]:
-    """Symmetric per-group int8: x (..., n) -> (q int8 (..., n), scales f32
-    (..., n/quant_block)).  ``n`` must be a multiple of ``quant_block``.
+    """Symmetric per-group int8 quantization.
+
+    Args:
+      x: ``(..., n)`` values (cast to f32 internally); ``n`` must be a
+        multiple of ``quant_block``.  Leading axes (cohort ``Z``, version
+        stack ``V``) are batched through unchanged.
+      quant_block: elements per scale group, ``s = max|group| / 127``.
+
+    Returns: ``(q, scales)`` with ``q`` int8 of ``x``'s shape and
+    ``scales`` f32 of shape ``(..., n / quant_block)``.
 
     All-zero groups get scale 0 and payload 0 (decode is exactly 0, so
     alignment padding stays invisible to any sum).  Non-finite inputs
@@ -131,7 +147,16 @@ def quantize(x: jax.Array, quant_block: int) -> Tuple[jax.Array, jax.Array]:
 
 def dequantize(q: jax.Array, scales: jax.Array,
                quant_block: int) -> jax.Array:
-    """Inverse of :func:`quantize`: int8 payload + scales -> f32."""
+    """Inverse of :func:`quantize`.
+
+    Args:
+      q: int8 payload ``(..., n)`` (``n`` a multiple of ``quant_block``).
+      scales: f32 ``(..., n / quant_block)`` per-group scales.
+      quant_block: the grouping both were produced with.
+
+    Returns: f32 ``(..., n)`` — ``q * scale`` per group.  The server-side
+    fold never calls this on uploads; the dequantizing ``masked_agg``
+    accumulate fuses it into the FMA instead."""
     g = q.astype(jnp.float32).reshape(q.shape[:-1] + (-1, quant_block))
     return (g * scales[..., None]).reshape(q.shape)
 
@@ -141,7 +166,15 @@ def dequantize(q: jax.Array, scales: jax.Array,
 # ---------------------------------------------------------------------------
 
 def encode(spec: WireSpec, flat: jax.Array) -> WireBuffer:
-    """Flat f32 vector (..., n) -> wire buffer.  For int8 wires, lengths
+    """Encode a flat vector for the wire.
+
+    Args:
+      spec: the wire format.
+      flat: ``(..., n)`` f32 values — one packed model per trailing
+        vector; leading axes (version stack, cohort) batch through.
+
+    Returns: a :class:`WireBuffer` — payload in ``spec.payload_dtype`` of
+    ``flat``'s shape, plus the f32 scale sidecar for int8 wires.  Lengths
     that are not a group multiple are zero-padded into the last group (the
     sidecar covers ``ceil(n / quant_block)`` groups); payload keeps the
     caller's length."""
@@ -157,7 +190,15 @@ def encode(spec: WireSpec, flat: jax.Array) -> WireBuffer:
 
 
 def decode(spec: WireSpec, buf: WireBuffer) -> jax.Array:
-    """Wire buffer -> f32 flat vector of the payload's length."""
+    """Decode a wire buffer back to values.
+
+    Args:
+      spec: the wire format the buffer was encoded with.
+      buf: payload ``(..., n)`` (+ scales for int8).
+
+    Returns: f32 ``(..., n)`` of the payload's length — what a client
+    actually trains on (the broadcast's real quantization error included).
+    """
     if spec.is_quantized:
         n = buf.payload.shape[-1]
         pad = (-n) % spec.quant_block
@@ -188,6 +229,41 @@ def analytic_wire_bytes(spec: WireSpec, n_elements: int) -> int:
     if spec.is_quantized:
         n += (-(-n_elements // spec.quant_block)) * 4
     return n
+
+
+class VersionCache:
+    """Version-tagged download accounting for the async broadcast.
+
+    The asynchronous engine lets a chunk train on a stale server version;
+    a client that already holds that version (it downloaded it in an
+    earlier round) must not be billed a second download, or the measured
+    savings of broadcast reuse would be fiction.  This host-side ledger
+    tracks which version tag each client last fetched:
+
+    * ``bill(client_id, tag, nbytes)`` — returns ``nbytes`` and records
+      the fetch if the client's cached tag differs, else returns 0;
+    * ``holds(client_id, tag)`` — query without billing.
+
+    Tags are opaque hashables (the engine uses the publishing round
+    index).  With ``async_lag=0`` every round publishes a fresh tag, so
+    every sampled client re-downloads and the accounting reproduces the
+    synchronous numbers exactly.
+    """
+
+    def __init__(self):
+        self._held: Dict[Any, Any] = {}
+
+    def holds(self, client_id, tag) -> bool:
+        """True when ``client_id`` already fetched version ``tag``."""
+        return self._held.get(client_id) == tag
+
+    def bill(self, client_id, tag, nbytes: int) -> int:
+        """Bytes this client's download of version ``tag`` costs now:
+        ``nbytes`` on a cache miss (recorded), 0 on a hit."""
+        if self.holds(client_id, tag):
+            return 0
+        self._held[client_id] = tag
+        return int(nbytes)
 
 
 # ---------------------------------------------------------------------------

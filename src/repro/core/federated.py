@@ -53,6 +53,19 @@ the encoder's real output sizes (payload + scale sidecar, download and
 upload separately), replacing the old analytic estimate (kept as
 ``analytic_bytes_per_round`` — the consistency oracle).
 
+**Async contract.**  With ``FedConfig.async_lag > 0`` the trainer
+delegates ``run_round`` to ``core/async_rounds.AsyncRoundEngine``: chunk
+``t`` of a round trains on the version-tagged server params published at
+fold ``t - async_lag`` of the global fold stream (the first ``async_lag``
+chunks overlap the previous round's fold and carry a stale broadcast),
+and stale uploads fold with the polynomial staleness decay
+``1/(1+s)^async_decay`` multiplied into the same validity-weight path the
+NaN/padding exclusion uses.  ``async_lag=0`` IS this module's synchronous
+engine, bit-for-bit (test-enforced).  Download accounting becomes
+version-aware under async (``comm.VersionCache``): reused stale
+broadcasts are not re-billed, so ``total_bytes_down`` is measured per
+round instead of a static per-round constant.
+
 Cohort composition is stratified (k_s simple + k_c complex per round, the
 expectation of the paper's uniform 10% sampling) so shapes stay static;
 ``sample_uniform=True`` recovers uniform sampling via validity-weight
@@ -124,6 +137,96 @@ def make_client_trainer(loss_fn: Callable[[Tree, Batch], jax.Array],
 
 
 # ---------------------------------------------------------------------------
+# The chunk-stream scan (shared by the sync round and the async engine)
+# ---------------------------------------------------------------------------
+
+def chunk_geometry(k: int, cohort_chunk: int) -> Tuple[int, int]:
+    """(chunk, n_chunks) of one population's scan: ``chunk <= k``, the
+    population padded up to a chunk multiple with zero-validity clients."""
+    chunk = k if cohort_chunk <= 0 else min(cohort_chunk, k)
+    return chunk, -(-k // chunk)
+
+
+def stream_population(state, get_src, train_fn, data, key, agg_fold, *,
+                      k: int, chunk: int, n_chunks: int,
+                      is_simple_flag: bool, skip_nan: bool,
+                      version_idx=None, staleness_w=None):
+    """Scan over one population's chunks: train + fold into running sums.
+
+    The ONE chunk-stream implementation — the synchronous round and the
+    asynchronous engine (``core/async_rounds.py``) both call it, so the
+    two engines cannot drift (the async lag=0 bit-parity gate covers
+    exactly the extras below).
+
+    Args:
+      state: the running aggregation state (``agg_fold``'s carry).
+      get_src: ``get_src(version_idx_or_None) -> params tree`` — the
+        broadcast one chunk trains on.  The sync round ignores the
+        argument (one fresh broadcast); the async engine dynamic-indexes
+        its version stack with it.
+      train_fn / data / key / agg_fold: the population's client trainer,
+        stacked client datasets (leading dim ``k``), population RNG key
+        (per-client keys are ``fold_in(key, i)``), and the engine's fold.
+      k / chunk / n_chunks: the population's static chunk geometry
+        (:func:`chunk_geometry`).  ``k`` is padded up to
+        ``n_chunks * chunk`` with zero-validity clients (wrapped data) so
+        shapes stay static; padding never reaches the aggregate or the
+        loss metric.
+      is_simple_flag / skip_nan: population membership constant and the
+        NaN-device exclusion toggle.
+      version_idx / staleness_w: the async extras — per-chunk
+        ``(n_chunks,)`` broadcast version index (handed to ``get_src``)
+        and staleness coefficient (multiplied into validity as f32, the
+        shared masked-weight path).  ``None``/``None`` keeps validity
+        bool: the synchronous engine's exact program.
+
+    Returns: ``(state, mean_loss, n_valid)``.
+    """
+    k_pad = n_chunks * chunk
+    if k_pad != k:
+        wrap = jnp.arange(k_pad) % k
+        data = jax.tree.map(lambda x: jnp.take(x, wrap, axis=0), data)
+    keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(
+        jnp.arange(k_pad))
+    real = jnp.arange(k_pad) < k
+
+    to_chunks = lambda x: x.reshape((n_chunks, chunk) + x.shape[1:])
+    is_async = version_idx is not None
+    xs = (jax.tree.map(to_chunks, data), to_chunks(keys), to_chunks(real))
+    if is_async:
+        xs = xs + (version_idx, staleness_w)
+    is_simple = jnp.full((chunk,), is_simple_flag)
+
+    def tile(tree):
+        return jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (chunk,) + x.shape), tree)
+
+    def fold_chunk(carry, xs):
+        state, loss_sum, valid_sum = carry
+        if is_async:
+            data_i, keys_i, real_i, idx_i, w_i = xs
+        else:
+            data_i, keys_i, real_i = xs
+            idx_i = None
+        trained, losses = jax.vmap(train_fn)(
+            tile(get_src(idx_i)), data_i, keys_i)
+        valid = real_i
+        if skip_nan:
+            valid = valid & jax.vmap(masking.tree_isfinite)(trained)
+        fold_valid = (valid.astype(jnp.float32) * w_i if is_async
+                      else valid)
+        state = agg_fold(state, trained, is_simple, fold_valid)
+        loss_sum = loss_sum + jnp.sum(jnp.where(real_i, losses, 0.0))
+        valid_sum = valid_sum + jnp.sum(valid)
+        return (state, loss_sum, valid_sum), None
+
+    zero = jnp.zeros((), jnp.float32)
+    (state, loss_sum, valid_sum), _ = jax.lax.scan(
+        fold_chunk, (state, zero, zero), xs)
+    return state, loss_sum / k, valid_sum
+
+
+# ---------------------------------------------------------------------------
 # Server state
 # ---------------------------------------------------------------------------
 
@@ -185,6 +288,13 @@ class FederatedTrainer:
         donate = (0, 1) if jax.default_backend() != "cpu" else ()
         self._round_fn = jax.jit(self._make_round_fn(),
                                  donate_argnums=donate)
+        # bounded-lag async engine (core/async_rounds.py): owns the
+        # version stack + staleness schedule; run_round delegates to it.
+        # Imported lazily — async_rounds imports this module at top level.
+        self.async_engine = None
+        if fed.async_lag > 0:
+            from repro.core import async_rounds
+            self.async_engine = async_rounds.AsyncRoundEngine(self)
 
     # -- chunk-size autotuning (ROADMAP item) --------------------------------
 
@@ -226,12 +336,18 @@ class FederatedTrainer:
         true element counts: complex devices exchange the whole model,
         simple devices only the index set M.  Alignment padding is a local
         layout artifact (static offsets on both ends) and is never billed.
+
+        Also pins ``per_simple_bytes`` / ``per_complex_bytes`` — ONE
+        client's one-way wire cost per population — the single source the
+        async engine's version-aware billing reuses, so the two
+        accountings cannot desynchronize.
         """
         n_m = int(np.sum(np.asarray(self.flat_mask)))   # |M| true elements
-        per_complex = comm.wire_bytes(self.wire, self.layout.n_params)
-        per_simple = comm.wire_bytes(self.wire, n_m)
-        one_way = float(self.k_simple * per_simple
-                        + self.k_complex * per_complex)
+        self.per_complex_bytes = comm.wire_bytes(self.wire,
+                                                 self.layout.n_params)
+        self.per_simple_bytes = comm.wire_bytes(self.wire, n_m)
+        one_way = float(self.k_simple * self.per_simple_bytes
+                        + self.k_complex * self.per_complex_bytes)
         return one_way, one_way
 
     def analytic_bytes_per_round(self) -> float:
@@ -272,51 +388,10 @@ class FederatedTrainer:
                 flat_mask=flat_mask, block_n=fed.agg_block_n,
                 stream_dtype=stream_dtype, wire=wire)
 
-        def tile(tree, k):
-            return jax.tree.map(
-                lambda x: jnp.broadcast_to(x[None], (k,) + x.shape), tree)
-
-        def stream_population(state, src_params, train_fn, data, key,
-                              agg_fold, *, k: int, is_simple_flag: bool):
-            """scan over chunks: train + fold into the running sums.
-
-            Pads k up to a chunk multiple with zero-validity clients
-            (wrapped data) so shapes stay static; padding never reaches the
-            aggregate or the loss metric.
-            """
-            chunk = (k if self.cohort_chunk <= 0
-                     else min(self.cohort_chunk, k))
-            k_pad = -(-k // chunk) * chunk
-            n_chunks = k_pad // chunk
-            if k_pad != k:
-                idx = jnp.arange(k_pad) % k
-                data = jax.tree.map(lambda x: jnp.take(x, idx, axis=0), data)
-            keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(
-                jnp.arange(k_pad))
-            real = jnp.arange(k_pad) < k
-
-            to_chunks = lambda x: x.reshape((n_chunks, chunk) + x.shape[1:])
-            xs = (jax.tree.map(to_chunks, data), to_chunks(keys),
-                  to_chunks(real))
-            is_simple = jnp.full((chunk,), is_simple_flag)
-
-            def fold_chunk(carry, xs):
-                state, loss_sum, valid_sum = carry
-                data_i, keys_i, real_i = xs
-                trained, losses = jax.vmap(train_fn)(
-                    tile(src_params, chunk), data_i, keys_i)
-                valid = real_i
-                if fed.skip_nan_devices:
-                    valid = valid & jax.vmap(masking.tree_isfinite)(trained)
-                state = agg_fold(state, trained, is_simple, valid)
-                loss_sum = loss_sum + jnp.sum(jnp.where(real_i, losses, 0.0))
-                valid_sum = valid_sum + jnp.sum(valid)
-                return (state, loss_sum, valid_sum), None
-
-            zero = jnp.zeros((), jnp.float32)
-            (state, loss_sum, valid_sum), _ = jax.lax.scan(
-                fold_chunk, (state, zero, zero), xs)
-            return state, loss_sum / k, valid_sum
+        chunk_s, n_chunks_s = chunk_geometry(self.k_simple,
+                                             self.cohort_chunk)
+        chunk_c, n_chunks_c = chunk_geometry(self.k_complex,
+                                             self.cohort_chunk)
 
         def round_fn(complex_params: Tree, simple_host: Optional[Tree],
                      data_s: Batch, data_c: Batch, rng: jax.Array,
@@ -333,11 +408,15 @@ class FederatedTrainer:
                           if algo == "decouple" else bc_complex)
             state = agg_init(complex_params)
             state, loss_s, valid_s = stream_population(
-                state, src_simple, train_simple, data_s, rs, agg_fold,
-                k=self.k_simple, is_simple_flag=True)
+                state, lambda _: src_simple, train_simple, data_s, rs,
+                agg_fold, k=self.k_simple, chunk=chunk_s,
+                n_chunks=n_chunks_s, is_simple_flag=True,
+                skip_nan=fed.skip_nan_devices)
             state, loss_c, valid_c = stream_population(
-                state, bc_complex, train_complex, data_c, rc, agg_fold,
-                k=self.k_complex, is_simple_flag=False)
+                state, lambda _: bc_complex, train_complex, data_c, rc,
+                agg_fold, k=self.k_complex, chunk=chunk_c,
+                n_chunks=n_chunks_c, is_simple_flag=False,
+                skip_nan=fed.skip_nan_devices)
             new_complex, new_simple_host = agg_finalize(
                 state, template=complex_params)
             metrics = {"loss_simple": loss_s,
@@ -376,6 +455,8 @@ class FederatedTrainer:
         HLO) without running it.  Consumes one cohort sample from the
         host-side sampler.
         """
+        if self.async_engine is not None:
+            return self.async_engine.lower_round()
         simple_ids, complex_ids = self._sample_cohort()
         key = jax.random.PRNGKey(self.fed.seed * 100003 + self.server.round)
         return self._round_fn.lower(
@@ -384,6 +465,8 @@ class FederatedTrainer:
             self._flat_mask_arg())
 
     def run_round(self) -> Dict[str, float]:
+        if self.async_engine is not None:
+            return self.async_engine.run_round()
         simple_ids, complex_ids = self._sample_cohort()
         data_s = self._gather(simple_ids)
         data_c = self._gather(complex_ids)

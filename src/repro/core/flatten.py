@@ -98,9 +98,18 @@ def build_layout(tree: Tree, *, align: int = LANES,
                  total_multiple: int = 0) -> FlatLayout:
     """Assign every leaf of ``tree`` an aligned slice of one flat vector.
 
-    ``total_multiple`` additionally rounds the total length up (use the
-    kernel's ``block_n``) so the packed buffer needs no call-time padding
-    and the accumulator can alias in place.
+    Args:
+      tree: any pytree of arrays (or ``ShapeDtypeStruct``s) — only static
+        shapes/dtypes are read, never values.
+      align: per-slot alignment in elements (default: the 128-lane TPU
+        width, so every slot starts on a lane boundary).
+      total_multiple: additionally round the total length up to this (use
+        the kernel's ``block_n``) so the packed buffer needs no call-time
+        padding and the accumulator can alias in place.
+
+    Returns: a :class:`FlatLayout` whose offsets are a pure function of
+    (treedef, leaf shapes, align, total_multiple) — build it once, reuse
+    it for every round, checkpoint and wire exchange of that model.
     """
     leaves, treedef = jax.tree.flatten(tree)
     slots = []
@@ -146,10 +155,19 @@ def layout_of(tree: Tree, *, align: int = LANES,
 
 def pack_stacked(layout: FlatLayout, tree: Tree, *,
                  dtype=jnp.float32) -> jax.Array:
-    """Stacked tree (leaves ``(Z, *shape)``) -> one ``(Z, n_flat)`` buffer.
+    """Pack a stacked tree into one contiguous per-client buffer.
 
-    Alignment padding is zero-filled, so padded lanes contribute exactly 0
-    to any weighted sum over the buffer.
+    Args:
+      layout: the static packing plan (built for ONE client — no cohort
+        axis).
+      tree: tree with leaves ``(Z, *slot.shape)`` — ``Z`` stacked client
+        models sharing the layout's treedef.
+      dtype: buffer dtype (``bfloat16`` halves fold read traffic;
+        accumulation downstream stays f32).
+
+    Returns: one ``(Z, layout.n_flat)`` buffer.  Alignment padding is
+    zero-filled, so padded lanes contribute exactly 0 to any weighted sum
+    over the buffer.
     """
     leaves = jax.tree.flatten(tree)[0]
     z = leaves[0].shape[0]
@@ -166,14 +184,26 @@ def pack_stacked(layout: FlatLayout, tree: Tree, *,
 
 
 def pack(layout: FlatLayout, tree: Tree, *, dtype=jnp.float32) -> jax.Array:
-    """Unstacked tree -> one ``(n_flat,)`` vector (zero-padded slices)."""
+    """Pack ONE (unstacked) model tree into a ``(n_flat,)`` vector.
+
+    The single-model form of :func:`pack_stacked` (same zero-padding
+    contract) — the unit the wire encoder, the checkpoint writer and the
+    async engine's version buffer all operate on."""
     stacked = jax.tree.map(lambda x: x[None], tree)
     return pack_stacked(layout, stacked, dtype=dtype)[0]
 
 
 def unpack(layout: FlatLayout, flat: jax.Array, *, cast: bool = True) -> Tree:
-    """``(n_flat,)`` vector -> tree with the layout's shapes (and dtypes
-    when ``cast``)."""
+    """Inverse of :func:`pack`: restore the tree from one flat vector.
+
+    Args:
+      layout: the packing plan the vector was produced with.
+      flat: ``(n_flat,)`` vector (alignment padding present but ignored).
+      cast: cast each leaf back to its slot dtype (else leaves keep
+        ``flat.dtype`` — the finalize path casts once at the end instead).
+
+    Returns: a tree with the layout's treedef and leaf ``shape``s.
+    """
     leaves = []
     for slot in layout.slots:
         x = jax.lax.dynamic_slice_in_dim(flat, slot.offset, slot.size)
@@ -182,10 +212,42 @@ def unpack(layout: FlatLayout, flat: jax.Array, *, cast: bool = True) -> Tree:
     return jax.tree.unflatten(layout.treedef, leaves)
 
 
+def unpack_stacked(layout: FlatLayout, flat: jax.Array, *,
+                   cast: bool = True) -> Tree:
+    """Inverse of :func:`pack_stacked`: ``(V, n_flat)`` -> stacked tree.
+
+    Args:
+      layout: the packing plan (per-row; the leading axis is untouched).
+      flat: ``(V, n_flat)`` buffer — ``V`` packed models (e.g. the async
+        engine's version-tagged broadcast stack).
+      cast: cast leaves back to their slot dtypes.
+
+    Returns: a tree whose leaves are ``(V, *slot.shape)`` — index the
+    leading axis to recover one model (the async round scan does this with
+    ``lax.dynamic_index_in_dim`` per chunk).
+    """
+    leaves = []
+    v = flat.shape[0]
+    for slot in layout.slots:
+        x = jax.lax.dynamic_slice_in_dim(flat, slot.offset, slot.size,
+                                         axis=1)
+        x = x.reshape((v,) + slot.shape)
+        leaves.append(x.astype(slot.dtype) if cast else x)
+    return jax.tree.unflatten(layout.treedef, leaves)
+
+
 def pack_mask(layout: FlatLayout, mask_tree: Tree) -> jax.Array:
-    """Mask tree (leaves broadcastable per layout slot) -> ``(n_flat,)``
-    bool bitvector.  Padding lanes are False; since packed inputs are zero
-    there, the choice cannot affect the aggregate."""
+    """Lower the index-set-M mask tree to one flat bool bitvector.
+
+    Args:
+      layout: the packing plan of the model the mask describes.
+      mask_tree: same treedef as the model; each leaf broadcastable to its
+        slot's ``shape`` (scalars mark a whole leaf in/out of M).
+
+    Returns: ``(n_flat,)`` bool vector, precomputed once per trainer and
+    passed into the round jit as an argument.  Padding lanes are False;
+    since packed inputs are zero there, the choice cannot affect the
+    aggregate."""
     leaves = jax.tree.flatten(mask_tree)[0]
     parts = []
     for m, slot in zip(leaves, layout.slots):

@@ -24,7 +24,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import InputShape, ModelConfig
-from repro.core import aggregate, comm, flatten, masking
+from repro.core import aggregate, async_rounds, comm, flatten, masking
 from repro.core.adapters import LMAdapter
 from repro.models import transformer as tfm
 from repro.models.common import NO_POLICY, Policy
@@ -51,11 +51,14 @@ def make_fed_round_step(cfg: ModelConfig, policy: Policy = NO_POLICY, *,
                         local_steps: int, lr: float = 0.1,
                         clip_norm: float = 10.0, cohort_chunk: int = 0,
                         agg_engine: str = "flat", agg_block_n: int = 2048,
-                        comm_dtype: str = "float32", quant_block: int = 128):
+                        comm_dtype: str = "float32", quant_block: int = 128,
+                        staleness_scheme: str = "poly",
+                        staleness_decay: float = 0.5):
     """One FedHeN round over a stacked cohort, streaming in chunks.
 
-    Returns ``round_step(cohort, data, is_simple, flat_mask=None)
-    -> (new_complex, loss)`` with ``cohort`` stacked client params (K, ...),
+    Returns ``round_step(cohort, data, is_simple, flat_mask=None,
+    staleness=None) -> (new_complex, loss)`` with ``cohort`` stacked
+    client params (K, ...),
     ``data`` of shape (K, B, local_steps, S+1) and ``is_simple`` (K,).
     ``cohort_chunk`` must divide K (0 = one chunk); the engine scans chunk
     by chunk, folding each trained chunk into running masked sums — the
@@ -76,6 +79,15 @@ def make_fed_round_step(cfg: ModelConfig, policy: Policy = NO_POLICY, *,
     sharded cohort arrives already broadcast, so only the client->server
     direction crosses this step — the fold consumes the encoded uploads
     (int8 via the dequantizing masked_agg accumulate).
+
+    ``staleness`` is the async driver's seam (core/async_rounds.py owns
+    the versioning; a sharded launch driver passes the result here): a
+    ``(K,)`` array of per-client broadcast staleness in rounds (0 =
+    fresh).  Each upload's validity weight is multiplied by
+    ``staleness_weight(s, scheme=staleness_scheme,
+    decay=staleness_decay)`` on the same masked-weight path NaN exclusion
+    uses; ``None`` (and all-zero staleness) is exactly the synchronous
+    fold.
     """
     adapter = LMAdapter(cfg, policy=policy, remat=True)
     wire = comm.WireSpec(comm_dtype, quant_block)
@@ -100,7 +112,8 @@ def make_fed_round_step(cfg: ModelConfig, policy: Policy = NO_POLICY, *,
         return params, loss
 
     def round_step(cohort: Tree, data: jax.Array, is_simple: jax.Array,
-                   flat_mask: Optional[jax.Array] = None):
+                   flat_mask: Optional[jax.Array] = None,
+                   staleness: Optional[jax.Array] = None):
         k = data.shape[0]
         chunk = k if cohort_chunk <= 0 else cohort_chunk
         if k % chunk:
@@ -118,18 +131,25 @@ def make_fed_round_step(cfg: ModelConfig, policy: Policy = NO_POLICY, *,
             agg_engine, algorithm="fedhen", mask=mask, layout=layout,
             flat_mask=flat_mask, block_n=agg_block_n, wire=wire)
 
+        if staleness is None:
+            st_w = jnp.ones((k,), jnp.float32)
+        else:
+            st_w = async_rounds.staleness_weight(
+                staleness, scheme=staleness_scheme, decay=staleness_decay)
+
         to_chunks = lambda x: x.reshape((n_chunks, chunk) + x.shape[1:])
         xs = (jax.tree.map(to_chunks, cohort), to_chunks(data),
-              to_chunks(is_simple))
+              to_chunks(is_simple), to_chunks(st_w))
 
         def fold_chunk(carry, xs):
             state, loss_sum = carry
-            cohort_i, data_i, simple_i = xs
+            cohort_i, data_i, simple_i, st_w_i = xs
             cohort_i = constrain_cohort(cohort_i)
             trained, losses = jax.vmap(client_train)(
                 cohort_i, data_i.transpose(0, 2, 1, 3), simple_i)
             valid = jax.vmap(masking.tree_isfinite)(trained)
-            state = agg_fold(state, trained, simple_i, valid)
+            state = agg_fold(state, trained, simple_i,
+                             valid.astype(jnp.float32) * st_w_i)
             return (state, loss_sum + jnp.sum(losses)), None
 
         state = agg_init(template)

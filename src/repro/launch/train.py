@@ -46,7 +46,9 @@ def build_trainer(args) -> tuple:
         agg_engine=args.agg_engine, agg_block_n=args.agg_block_n,
         agg_stream_dtype=args.agg_stream_dtype,
         agg_memory_budget_mb=args.agg_memory_budget_mb,
-        comm_dtype=args.comm_dtype, quant_block=args.quant_block)
+        comm_dtype=args.comm_dtype, quant_block=args.quant_block,
+        async_lag=args.async_lag, async_staleness=args.staleness,
+        async_decay=args.staleness_decay)
 
     if args.model == "resnet":
         data = synthetic_cifar(args.data_points, 10, seed=args.seed)
@@ -117,6 +119,18 @@ def main(argv=None):
     ap.add_argument("--quant-block", type=int, default=128,
                     help="int8 wire scale-group size (elements per f32 "
                          "scale; must divide 128)")
+    ap.add_argument("--async-lag", type=int, default=0,
+                    help="bounded broadcast staleness in chunk folds: "
+                         "chunk i of a round trains on the server version "
+                         "published at fold i-lag (the first lag chunks "
+                         "overlap the previous round's fold); 0 = fully "
+                         "synchronous")
+    ap.add_argument("--staleness", default="poly", choices=("poly", "none"),
+                    help="staleness weighting of stale uploads: 'poly' = "
+                         "FedAsync 1/(1+s)^a decay, 'none' = full weight")
+    ap.add_argument("--staleness-decay", type=float, default=0.5,
+                    help="exponent a of the polynomial staleness decay "
+                         "1/(1+s)^a")
     ap.add_argument("--local-epochs", type=int, default=5)
     ap.add_argument("--lr", type=float, default=0.1)
     ap.add_argument("--batch-size", type=int, default=50)
@@ -144,6 +158,14 @@ def main(argv=None):
         print(f"cohort_chunk=auto -> {trainer.cohort_chunk} "
               f"(per-client packed {per_mb:.2f} MiB at wire/stream dtype, "
               f"budget {args.agg_memory_budget_mb:.0f} MiB)")
+    if args.async_lag:
+        eng = trainer.async_engine
+        steady = eng.schedule(10**9)
+        print(f"async rounds: lag={eng.lag} folds/round="
+              f"{eng.folds_per_round} versions={eng.n_versions} "
+              f"staleness/chunk={list(map(int, steady[0]))} + "
+              f"{list(map(int, steady[1]))} "
+              f"(weights {args.staleness}, a={args.staleness_decay})")
     if args.comm_dtype != "float32":
         print(f"comm wire {args.comm_dtype}: "
               f"{trainer.bytes_per_round / 1e6:.3f} MB/round measured "

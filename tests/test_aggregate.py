@@ -264,6 +264,72 @@ def test_flat_fold_is_one_kernel_launch(algo, n_launches):
     assert n_tree == len(jax.tree.leaves(cohort))
 
 
+# ---------------------------------------------------------------------------
+# Float validity weights (the async engine's staleness path)
+# ---------------------------------------------------------------------------
+
+def _np_weighted_mean(x, w):
+    w = np.asarray(w, np.float64)
+    x = np.where((w > 0).reshape((-1,) + (1,) * (np.asarray(x).ndim - 1)),
+                 np.asarray(x, np.float64), 0.0)
+    tot = w.sum()
+    if tot <= 0:
+        return np.zeros(x.shape[1:])
+    return (x * w.reshape((-1,) + (1,) * (x.ndim - 1))).sum(0) / tot
+
+
+@pytest.mark.parametrize("algo", ["fedhen", "noside", "decouple"])
+@pytest.mark.parametrize("engine", ["flat", "tree"])
+def test_float_staleness_weights_match_oracle(algo, engine):
+    """``valid`` as f32 per-client weights (validity x staleness decay):
+    both streaming engines implement the weighted mean, with a NaN device
+    and a zero-weight device gated out — the async engine's whole fold
+    contract in one case."""
+    cohort, mask, is_simple, _ = _random_case(11)
+    cohort["a"] = cohort["a"].at[2].set(jnp.nan)     # NaN device
+    # fractional staleness weights; device 2 (NaN) and 5 at weight 0
+    w = jnp.asarray([1.0, 0.5, 0.0, 0.25, 1.0, 0.0, 0.5, 1.0, 0.25],
+                    jnp.float32)
+    stream = _stream if engine == "flat" else _stream_tree
+    got_c, got_host = stream(cohort, mask, is_simple, w, algo, 3)
+    s = np.asarray(is_simple)
+    w_np = np.asarray(w)
+    w_in = w_np * s if algo == "decouple" else w_np
+    w_out = w_np * ~s
+    if algo == "decouple":
+        # new complex model: complex-group weighted mean everywhere
+        want_a = _np_weighted_mean(cohort["a"], w_out)
+        want_b = _np_weighted_mean(cohort["b"], w_out)
+    else:
+        want_a = _np_weighted_mean(cohort["a"], w_in)    # inside M
+        want_b = _np_weighted_mean(cohort["b"], w_out)   # outside M
+    np.testing.assert_allclose(np.asarray(got_c["a"]), want_a,
+                               rtol=2e-5, atol=2e-6)
+    np.testing.assert_allclose(np.asarray(got_c["b"]), want_b,
+                               rtol=2e-5, atol=2e-6)
+    for leaf in jax.tree.leaves(got_c):
+        assert np.isfinite(np.asarray(leaf)).all()
+    if algo == "decouple":
+        # the simple host: simple-group mean in M, complex-group outside
+        np.testing.assert_allclose(
+            np.asarray(got_host["a"]),
+            _np_weighted_mean(cohort["a"], w_in), rtol=2e-5, atol=2e-6)
+        np.testing.assert_allclose(
+            np.asarray(got_host["b"]),
+            _np_weighted_mean(cohort["b"], w_out), rtol=2e-5, atol=2e-6)
+
+
+def test_all_one_float_weights_bit_match_bool_valid():
+    """The lag=0 parity primitive: f32 all-ones weights are bit-identical
+    to bool validity through the fold."""
+    cohort, mask, is_simple, valid = _random_case(12)
+    got_b, _ = _stream(cohort, mask, is_simple, valid, "fedhen", 3)
+    got_f, _ = _stream(cohort, mask, is_simple,
+                       valid.astype(jnp.float32) * 1.0, "fedhen", 3)
+    for a, b in zip(jax.tree.leaves(got_b), jax.tree.leaves(got_f)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
 def test_flat_fold_uses_prebuilt_layout_and_mask():
     """The trainer path: one static layout + precomputed flat bitvector
     give the same result as the self-deriving defaults."""

@@ -1,0 +1,116 @@
+"""Intra-repo markdown link checker (plain Python, no deps) — CI docs gate.
+
+Walks every ``*.md`` under the repo root, extracts inline links and
+images (``[text](target)`` / ``![alt](target)``), and fails on:
+
+* a relative link whose target file/directory does not exist;
+* a ``#fragment`` (same-file or cross-file into another ``.md``) that
+  matches no heading's GitHub-style anchor slug.
+
+External schemes (``http://``, ``https://``, ``mailto:``) are *not*
+fetched — this gate is about the repo's own docs never rotting against
+its own tree.  Links inside fenced code blocks are ignored (they are
+examples, not navigation).
+
+Usage: ``python tools/check_md_links.py [root]`` (default: repo root,
+inferred from this file's location).  Exits 1 with a per-link report on
+any broken link.
+"""
+
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+SKIP_DIRS = {".git", ".github", "__pycache__", ".pytest_cache"}
+
+LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+FENCE_RE = re.compile(r"^(```|~~~)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$")
+EXTERNAL = ("http://", "https://", "mailto:", "ftp://")
+
+
+def heading_anchors(md_path: pathlib.Path) -> set:
+    """GitHub-style anchor slugs of every heading in a markdown file."""
+    anchors = set()
+    counts = {}
+    in_fence = False
+    for line in md_path.read_text(encoding="utf-8").splitlines():
+        if FENCE_RE.match(line.strip()):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        m = HEADING_RE.match(line)
+        if not m:
+            continue
+        text = m.group(1).strip()
+        # strip inline code/links/emphasis markers, then slugify
+        text = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", text)
+        text = re.sub(r"[`*_]", "", text)
+        slug = re.sub(r"[^\w\- ]", "", text.lower()).strip()
+        slug = re.sub(r"\s", "-", slug)
+        n = counts.get(slug, 0)
+        counts[slug] = n + 1
+        anchors.add(slug if n == 0 else f"{slug}-{n}")
+    return anchors
+
+
+def iter_links(md_path: pathlib.Path):
+    """(line_number, target) for every inline link outside code fences."""
+    in_fence = False
+    for i, line in enumerate(md_path.read_text(encoding="utf-8")
+                             .splitlines(), 1):
+        if FENCE_RE.match(line.strip()):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        for m in LINK_RE.finditer(line):
+            yield i, m.group(1)
+
+
+def check_file(md_path: pathlib.Path, root: pathlib.Path) -> list:
+    errors = []
+    for lineno, target in iter_links(md_path):
+        if target.startswith(EXTERNAL):
+            continue
+        path_part, _, fragment = target.partition("#")
+        if not path_part:                       # same-file #anchor
+            dest = md_path
+        else:
+            dest = (md_path.parent / path_part).resolve()
+            if not dest.exists():
+                errors.append(f"{md_path.relative_to(root)}:{lineno}: "
+                              f"broken link -> {target}")
+                continue
+        if fragment and dest.suffix == ".md" and dest.is_file():
+            if fragment.lower() not in heading_anchors(dest):
+                errors.append(f"{md_path.relative_to(root)}:{lineno}: "
+                              f"missing anchor -> {target}")
+    return errors
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    root = pathlib.Path(argv[0]).resolve() if argv else \
+        pathlib.Path(__file__).resolve().parent.parent
+    md_files = sorted(
+        p for p in root.rglob("*.md")
+        if not any(part in SKIP_DIRS for part in p.parts))
+    errors = []
+    for md in md_files:
+        errors.extend(check_file(md, root))
+    if errors:
+        print(f"BROKEN MARKDOWN LINKS ({len(errors)}):")
+        for e in errors:
+            print(f"  {e}")
+        return 1
+    print(f"docs ok: {len(md_files)} markdown files, all intra-repo "
+          f"links resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
