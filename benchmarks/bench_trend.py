@@ -15,12 +15,20 @@ The bench files this repo commits are trend-gated in CI:
   ``label`` (``lag0``/``lag1``/``lag2``); gated metrics are the simulated
   straggler round-clock speedups (must not drop).  The bit-for-bit lag=0
   parity is gated by that script's own exit code, not the trend diff.
+* ``BENCH_obs.json`` (benchmarks/obs_overhead.py) — rows keyed by
+  ``variant`` (``off``/``on_null``/``on_jsonl``); gated metrics are the
+  telemetry overhead percentages vs the uninstrumented round loop and
+  the deterministic events-per-round count.  The <2%/<5% absolute
+  ceilings are gated by that script's own exit code; the trend diff
+  catches creep below them.
 
 A metric regresses when the fresh value is worse than baseline by more
 than ``--tolerance`` (default 10%): "worse" is *larger* for cost metrics
 (bytes, op counts) and *smaller* for the savings ratio.  Zero-valued
 byte baselines get a small absolute slack so allocator jitter across
-jax/XLA releases cannot flake a 0-vs-208-bytes comparison.
+jax/XLA releases cannot flake a 0-vs-208-bytes comparison, and
+percentage metrics (``*_pct``) get a small absolute-points slack so
+timer noise around a near-zero overhead baseline cannot flake the diff.
 
 Usage: ``python benchmarks/bench_trend.py BASELINE FRESH [--tolerance .1]``
 """
@@ -49,10 +57,17 @@ GATES = {
         "metrics": {"speedup_straggler_first": "down",
                     "speedup_straggler_last": "down"},
     },
+    "obs_overhead": {
+        "key": ("variant",),
+        "metrics": {"overhead_pct": "up", "events_per_round": "up"},
+    },
 }
 
 # absolute slack for byte metrics whose baseline is ~0 (allocator jitter)
 ZERO_SLACK_BYTES = 4096
+# absolute slack (percentage points) for *_pct metrics: overhead
+# baselines sit near 0, where relative tolerance means nothing
+PCT_SLACK_POINTS = 2.0
 
 
 def index_rows(payload: Dict, key_fields: Tuple[str, ...]) -> Dict:
@@ -82,6 +97,8 @@ def compare(baseline: Dict, fresh: Dict, tolerance: float) -> List[str]:
                 limit = b * (1.0 + tolerance)
                 if metric.endswith("bytes") and b == 0:
                     limit += ZERO_SLACK_BYTES
+                if metric.endswith("_pct"):
+                    limit += PCT_SLACK_POINTS
                 bad = f > limit
             else:
                 bad = f < b * (1.0 - tolerance)

@@ -6,7 +6,13 @@ accuracy in fewer communication rounds than either baseline, because it
 trains on complex devices' data too (Eq. 2).
 
 Run:  PYTHONPATH=src python examples/quickstart.py
+
+Add ``--telemetry --telemetry-out run.jsonl`` to record the structured
+event stream (round-phase spans, client-health counters, byte ledgers)
+and render it with ``python tools/obs_report.py run.jsonl``.
 """
+
+import argparse
 
 import jax.numpy as jnp
 
@@ -15,6 +21,7 @@ from repro.core.adapters import LMAdapter
 from repro.core.federated import FederatedTrainer, rounds_to_target
 from repro.data.federated import iid_split
 from repro.data.synthetic import synthetic_lm
+from repro.obs import telemetry as obslib
 
 CFG = ModelConfig(n_layers=4, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
                   vocab_size=256, pattern=(LayerSpec("attn"),), exit_layer=2,
@@ -31,9 +38,9 @@ ENGINE = dict(cohort_chunk=2, agg_engine="flat", comm_dtype="float32",
               async_lag=0)
 
 
-def run(algorithm: str):
+def run(algorithm: str, rounds: int = ROUNDS, telemetry=None):
     fed = FedConfig(n_devices=20, n_simple=10, participation=0.2,
-                    rounds=ROUNDS, local_epochs=1, lr=0.1, batch_size=8,
+                    rounds=rounds, local_epochs=1, lr=0.1, batch_size=8,
                     algorithm=algorithm, seed=0, **ENGINE)
     data = synthetic_lm(400, 32, CFG.vocab_size, seed=1)
     shards = [
@@ -41,8 +48,9 @@ def run(algorithm: str):
         for s in iid_split(data, fed.n_devices, seed=2)]
     test = {"tokens": jnp.asarray(
         synthetic_lm(64, 32, CFG.vocab_size, seed=99)["tokens"])}
-    trainer = FederatedTrainer(LMAdapter(CFG), fed, shards)
-    history = trainer.run(ROUNDS, eval_every=2, test_batch=test)
+    trainer = FederatedTrainer(LMAdapter(CFG), fed, shards,
+                               telemetry=telemetry)
+    history = trainer.run(rounds, eval_every=2, test_batch=test)
     r = rounds_to_target(history, "acc_simple", TARGET)
     final = [h for h in history if "acc_simple" in h][-1]
     return {"algorithm": algorithm, "rounds_to_target": r,
@@ -51,17 +59,40 @@ def run(algorithm: str):
             "mbytes": trainer.total_bytes / 1e6}
 
 
-def main():
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--rounds", type=int, default=ROUNDS)
+    ap.add_argument("--telemetry", action="store_true",
+                    help="instrument the fedhen run with the repro/obs "
+                         "telemetry layer")
+    ap.add_argument("--telemetry-out", default="",
+                    help="write the fedhen run's event stream as JSONL "
+                         "here (implies --telemetry; render with "
+                         "tools/obs_report.py)")
+    args = ap.parse_args(argv)
+    tel = None
+    if args.telemetry or args.telemetry_out:
+        sinks = ([obslib.JsonlSink(args.telemetry_out)]
+                 if args.telemetry_out else [])
+        tel = obslib.Telemetry(sinks)
+
     print(f"target: simple-model accuracy >= {TARGET} "
           f"(rounds to target, lower is better)\n")
-    results = [run(a) for a in ("fedhen", "noside", "decouple")]
+    # one event stream per run: only the fedhen leg is instrumented, so
+    # the JSONL log stays reconcilable against one trainer's accounting
+    results = [run(a, rounds=args.rounds,
+                   telemetry=tel if a == "fedhen" else None)
+               for a in ("fedhen", "noside", "decouple")]
+    if tel is not None:
+        tel.close()
     hdr = f"{'algorithm':10s} {'rounds->tgt':>11s} {'simple':>8s} " \
           f"{'complex':>8s} {'comm MB':>9s}"
     print(hdr)
     print("-" * len(hdr))
     for r in results:
         rt = r["rounds_to_target"]
-        print(f"{r['algorithm']:10s} {rt if rt > 0 else '>'+str(ROUNDS):>11} "
+        print(f"{r['algorithm']:10s} "
+              f"{rt if rt > 0 else '>'+str(args.rounds):>11} "
               f"{r['final_acc_simple']:8.3f} {r['final_acc_complex']:8.3f} "
               f"{r['mbytes']:9.1f}")
     best_baseline = min(

@@ -444,6 +444,33 @@ def make_engine(engine: str, *, algorithm: str, mask: Tree,
     return init, fold, finalize
 
 
+def engine_attrs(engine: str, *, algorithm: str, block_n: int,
+                 stream_dtype=jnp.float32,
+                 wire: Optional[comm.WireSpec] = None) -> dict:
+    """Static description of a configured fold engine, as plain scalars.
+
+    What the telemetry ``run_config`` ledger records about the
+    aggregation path — computed next to :func:`make_engine`'s dispatch so
+    the recorded configuration cannot drift from the one that runs.
+    """
+    if engine not in ("flat", "tree"):
+        raise ValueError(f"unknown agg engine {engine!r}")
+    attrs = {
+        "agg_engine": engine,
+        "algorithm": algorithm,
+        "agg_block_n": int(block_n),
+        "agg_stream_dtype": str(jnp.dtype(stream_dtype)),
+    }
+    if wire is not None:
+        attrs.update({
+            "wire_dtype": str(wire.payload_dtype),
+            "wire_quantized": bool(wire.is_quantized),
+            "wire_quant_block": int(wire.quant_block)
+            if wire.is_quantized else 0,
+        })
+    return attrs
+
+
 # ---------------------------------------------------------------------------
 # Tree streaming aggregation (PR 2 per-leaf engine — parity reference)
 # ---------------------------------------------------------------------------

@@ -162,6 +162,10 @@ class AsyncRoundEngine:
         donate = (0, 1) if jax.default_backend() != "cpu" else ()
         self._round_fn = jax.jit(self._make_round_fn(),
                                  donate_argnums=donate)
+        # telemetry rides the trainer's registry (one event stream per
+        # run); the dispatch adds the compile/execute split when enabled
+        self._dispatch = federated.RoundDispatch(trainer.obs,
+                                                 self._round_fn)
 
     # -- version stack -------------------------------------------------------
 
@@ -184,6 +188,9 @@ class AsyncRoundEngine:
             host = flatten.pack(self.layout, tr.server.simple_host)
             self.versions_host = jnp.tile(host[None], (self.n_versions, 1))
         self.version_cache = comm.VersionCache()
+        # telemetry emits per-round hit/miss deltas; the cache counts
+        # cumulatively, so remember where the last round left off
+        self._seen_cache_counts = (0, 0)
         self._published_server = tr.server
 
     # -- schedule ------------------------------------------------------------
@@ -320,22 +327,54 @@ class AsyncRoundEngine:
         args, _ = self._round_args()
         return self._round_fn.lower(*args)
 
+    def _emit_async_health(self, s_s, s_c) -> None:
+        """Async-specific client health: the round's per-chunk staleness
+        histogram (``{staleness: chunk count}`` over the fold stream) and
+        the version-cache hit/miss deltas (a hit is a stale broadcast the
+        client already held — the reuse the byte accounting credits)."""
+        obs = self.trainer.obs
+        hist: dict = {}
+        for s in list(s_s) + list(s_c):
+            hist[int(s)] = hist.get(int(s), 0) + 1
+        obs.ledger("staleness_hist",
+                   {str(k): v for k, v in sorted(hist.items())})
+        cache = self.version_cache
+        seen_h, seen_m = self._seen_cache_counts
+        obs.counter("version_cache_hit", cache.hits - seen_h)
+        obs.counter("version_cache_miss", cache.misses - seen_m)
+        self._seen_cache_counts = (cache.hits, cache.misses)
+
     def run_round(self):
         """One async round: schedule staleness, train + fold the chunk
         stream, publish the new version, update the trainer's server
         state and measured byte totals."""
         tr = self.trainer
-        args, (simple_ids, complex_ids, s_s, s_c, r) = self._round_args()
-        (new_complex, new_host, self.versions, self.versions_host,
-         metrics) = self._round_fn(*args)
-        tr.server = federated.ServerState(
-            complex=new_complex, simple_host=new_host, round=r + 1)
-        self._published_server = tr.server
-        down = self._bill_download(simple_ids, complex_ids, s_s, s_c, r)
-        up = float(tr.k_simple * self._per_simple
-                   + tr.k_complex * self._per_complex)
-        self.last_bytes_down, self.last_bytes_up = down, up
-        tr.total_bytes_down += down
-        tr.total_bytes_up += up
-        tr.total_bytes += down + up
-        return {k: float(v) for k, v in metrics.items()}
+        obs = tr.obs
+        obs.set_round(tr.server.round)
+        with obs.span("round", engine="async", lag=self.lag):
+            with obs.span("sample_gather"):
+                args, (simple_ids, complex_ids, s_s, s_c, r) = \
+                    self._round_args()
+            (new_complex, new_host, self.versions, self.versions_host,
+             metrics) = self._dispatch(*args)
+            tr.server = federated.ServerState(
+                complex=new_complex, simple_host=new_host, round=r + 1)
+            self._published_server = tr.server
+            down = self._bill_download(simple_ids, complex_ids, s_s, s_c, r)
+            up = float(tr.k_simple * self._per_simple
+                       + tr.k_complex * self._per_complex)
+            self.last_bytes_down, self.last_bytes_up = down, up
+            tr.total_bytes_down += down
+            tr.total_bytes_up += up
+            tr.total_bytes += down + up
+            metrics = {k: float(v) for k, v in metrics.items()}
+            if obs.enabled:
+                federated.emit_round_phases(obs, populations=[
+                    ("simple", tr.k_simple, self.chunk_s,
+                     self.n_chunks_s, s_s),
+                    ("complex", tr.k_complex, self.chunk_c,
+                     self.n_chunks_c, s_c)],
+                    bytes_down=down, wire=tr.fed.comm_dtype)
+                self._emit_async_health(s_s, s_c)
+                tr._emit_round_health(metrics, down=down, up=up)
+        return metrics

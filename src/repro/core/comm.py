@@ -248,10 +248,16 @@ class VersionCache:
     index).  With ``async_lag=0`` every round publishes a fresh tag, so
     every sampled client re-downloads and the accounting reproduces the
     synchronous numbers exactly.
+
+    ``hits`` / ``misses`` count ``bill`` outcomes since construction —
+    the client-health telemetry reads them (a hit is a reused stale
+    broadcast, the async engine's measured savings).
     """
 
     def __init__(self):
         self._held: Dict[Any, Any] = {}
+        self.hits = 0
+        self.misses = 0
 
     def holds(self, client_id, tag) -> bool:
         """True when ``client_id`` already fetched version ``tag``."""
@@ -261,7 +267,9 @@ class VersionCache:
         """Bytes this client's download of version ``tag`` costs now:
         ``nbytes`` on a cache miss (recorded), 0 on a hit."""
         if self.holds(client_id, tag):
+            self.hits += 1
             return 0
+        self.misses += 1
         self._held[client_id] = tag
         return int(nbytes)
 

@@ -84,6 +84,7 @@ import numpy as np
 
 from repro.configs.base import FedConfig
 from repro.core import aggregate, comm, flatten, masking
+from repro.obs import telemetry as obslib
 from repro.optim.sgd import sgd_update
 
 Tree = Any
@@ -242,6 +243,91 @@ class ServerState:
 
 
 # ---------------------------------------------------------------------------
+# Telemetry plumbing (shared by the sync trainer and the async engine)
+# ---------------------------------------------------------------------------
+
+class RoundDispatch:
+    """Calls a round jit under telemetry spans.
+
+    With telemetry disabled this is a transparent passthrough to the jit
+    wrapper — the seed code path, zero extra work.  Enabled, the first
+    call is split into explicit ``trace_lower`` and ``compile`` spans via
+    AOT (``jit.lower(...).compile()``), the compiled program's roofline
+    ledger (``roofline/hlo_walk.py`` over the lowered HLO, plus XLA's own
+    cost analysis through the version-compat shim) is emitted once, and
+    the cached executable serves every subsequent round under a blocking
+    ``execute`` span.  The AOT path compiles the SAME lowering the jit
+    wrapper would, so round results are bit-identical either way
+    (test-enforced by the no-op-sink parity test).
+    """
+
+    def __init__(self, obs: obslib.Telemetry, jit_fn):
+        self.obs = obs
+        self.jit_fn = jit_fn
+        self.compiled = None
+
+    def _emit_roofline(self):
+        from repro.roofline import hlo_walk
+        counters = hlo_walk.analyze(self.compiled.as_text())
+        values = {"flops": counters["flops"],
+                  "hbm_bytes": counters["hbm_bytes"],
+                  "collective_bytes": counters["total_collective_bytes"]}
+        try:
+            ca = hlo_walk.xla_cost_analysis(self.compiled)
+            if ca and "flops" in ca:
+                values["xla_flops"] = float(ca["flops"])
+        except Exception:
+            pass  # cost_analysis is advisory; some backends refuse it
+        self.obs.ledger("roofline", values)
+
+    def __call__(self, *args):
+        obs = self.obs
+        if not obs.enabled:
+            return self.jit_fn(*args)
+        if self.compiled is None:
+            with obs.span("trace_lower"):
+                lowered = self.jit_fn.lower(*args)
+            with obs.span("compile"):
+                self.compiled = lowered.compile()
+            self._emit_roofline()
+        with obs.span("execute"):
+            return jax.block_until_ready(self.compiled(*args))
+
+
+def emit_round_phases(obs: obslib.Telemetry, *, populations,
+                      bytes_down: float, wire: str) -> None:
+    """Emit one round's logical phase spans:
+    ``broadcast -> train-chunk[t] -> fold -> finalize``.
+
+    These are *point* spans (``dur_s=None``): the round is one fused jit,
+    so the phases are real program structure with real attributes but
+    their wall time lives in the enclosing ``execute`` span — see
+    ``obs/telemetry.py``.  ``populations`` is a sequence of
+    ``(name, k, chunk, n_chunks, staleness)`` where ``staleness`` is
+    ``None`` for the synchronous engine or the per-chunk staleness
+    schedule (in rounds) for the async engine; chunk indices ``t`` run
+    over the round's global fold stream (simple chunks first, then
+    complex — the scan order).
+    """
+    if not obs.enabled:
+        return
+    obs.point_span("broadcast", wire=wire, bytes_down=bytes_down)
+    t = 0
+    n_folds = 0
+    for name, k, chunk, n_chunks, staleness in populations:
+        for i in range(n_chunks):
+            attrs = {"population": name, "chunk_size": chunk,
+                     "clients": max(min(chunk, k - i * chunk), 0)}
+            if staleness is not None:
+                attrs["staleness"] = int(staleness[i])
+            obs.point_span(f"train-chunk[{t}]", **attrs)
+            t += 1
+        n_folds += n_chunks
+    obs.point_span("fold", n_folds=n_folds)
+    obs.point_span("finalize")
+
+
+# ---------------------------------------------------------------------------
 # Round functions
 # ---------------------------------------------------------------------------
 
@@ -250,11 +336,16 @@ class FederatedTrainer:
 
     def __init__(self, adapter, fed: FedConfig,
                  client_data: List[Batch], *,
-                 rng: Optional[jax.Array] = None):
+                 rng: Optional[jax.Array] = None,
+                 telemetry: Optional[obslib.Telemetry] = None):
         if fed.algorithm not in aggregate.ALGORITHMS:
             raise ValueError(fed.algorithm)
         self.adapter = adapter
         self.fed = fed
+        # observability (repro/obs): None -> the disabled NOOP singleton,
+        # whose every emit short-circuits — the default, un-instrumented
+        # path (overhead CI-gated by benchmarks/obs_overhead.py)
+        self.obs = obslib.coalesce(telemetry)
         self.client_data = client_data
         self.rng = np.random.default_rng(fed.seed)
         key = rng if rng is not None else jax.random.PRNGKey(fed.seed)
@@ -288,6 +379,7 @@ class FederatedTrainer:
         donate = (0, 1) if jax.default_backend() != "cpu" else ()
         self._round_fn = jax.jit(self._make_round_fn(),
                                  donate_argnums=donate)
+        self._dispatch = RoundDispatch(self.obs, self._round_fn)
         # bounded-lag async engine (core/async_rounds.py): owns the
         # version stack + staleness schedule; run_round delegates to it.
         # Imported lazily — async_rounds imports this module at top level.
@@ -295,6 +387,8 @@ class FederatedTrainer:
         if fed.async_lag > 0:
             from repro.core import async_rounds
             self.async_engine = async_rounds.AsyncRoundEngine(self)
+        if self.obs.enabled:
+            self._emit_run_config()
 
     # -- chunk-size autotuning (ROADMAP item) --------------------------------
 
@@ -363,6 +457,67 @@ class FederatedTrainer:
                           ) * x.dtype.itemsize
         # down + up for each active device
         return 2.0 * (self.k_simple * simple + self.k_complex * total)
+
+    # -- telemetry (repro/obs) ----------------------------------------------
+
+    def _geometry(self) -> Tuple[Tuple[int, int], Tuple[int, int]]:
+        """((chunk_s, n_chunks_s), (chunk_c, n_chunks_c)) — the static
+        per-population chunk geometry of one round."""
+        return (chunk_geometry(self.k_simple, self.cohort_chunk),
+                chunk_geometry(self.k_complex, self.cohort_chunk))
+
+    def _emit_run_config(self) -> None:
+        """One ``run_config`` ledger at construction: the static facts a
+        run report leads with (cohort geometry, engine, wire, per-round
+        wire cost)."""
+        fed = self.fed
+        (chunk_s, n_s), (chunk_c, n_c) = self._geometry()
+        values = {
+            "engine": "async" if self.async_engine is not None else "sync",
+            "n_devices": fed.n_devices, "n_simple": fed.n_simple,
+            "k_simple": self.k_simple, "k_complex": self.k_complex,
+            "participation": fed.participation,
+            "cohort_chunk": self.cohort_chunk,
+            "n_chunks_simple": n_s, "n_chunks_complex": n_c,
+            "comm_dtype": fed.comm_dtype,
+            "async_lag": fed.async_lag,
+            "n_params": self.layout.n_params,
+            "bytes_down_per_round": self.bytes_down_per_round,
+            "bytes_up_per_round": self.bytes_up_per_round,
+        }
+        values.update(aggregate.engine_attrs(
+            fed.agg_engine, algorithm=fed.algorithm,
+            block_n=fed.agg_block_n, stream_dtype=fed.agg_stream_dtype,
+            wire=self.wire))
+        self.obs.ledger("run_config", values)
+
+    def _emit_round_health(self, metrics: Dict[str, float], *,
+                           down: Optional[float] = None,
+                           up: Optional[float] = None) -> None:
+        """Per-round client-health counters + the comm-bytes ledger.
+
+        The counters surface what the validity-weight path folds away
+        silently: devices excluded for NaNs this round and the weight-0
+        padding slots the chunk geometry adds.  The ledger repeats the
+        trainer's OWN accounting fields (cumulative totals included) so a
+        run log is exactly reconcilable against ``total_bytes*`` — the
+        async engine passes its version-aware ``down``/``up`` here, the
+        synchronous round uses its static per-round constants.
+        """
+        (chunk_s, n_s), (chunk_c, n_c) = self._geometry()
+        k = self.k_simple + self.k_complex
+        obs = self.obs
+        obs.counter("nan_excluded_devices", k - int(metrics["n_valid"]))
+        obs.counter("padding_weight0_clients",
+                    (n_s * chunk_s - self.k_simple)
+                    + (n_c * chunk_c - self.k_complex))
+        obs.ledger("comm_bytes", {
+            "down": self.bytes_down_per_round if down is None else down,
+            "up": self.bytes_up_per_round if up is None else up,
+            "cum_down": self.total_bytes_down,
+            "cum_up": self.total_bytes_up,
+            "cum_total": self.total_bytes,
+        })
 
     # -- the jitted round (streaming cohort engine) --------------------------
 
@@ -467,20 +622,34 @@ class FederatedTrainer:
     def run_round(self) -> Dict[str, float]:
         if self.async_engine is not None:
             return self.async_engine.run_round()
-        simple_ids, complex_ids = self._sample_cohort()
-        data_s = self._gather(simple_ids)
-        data_c = self._gather(complex_ids)
-        key = jax.random.PRNGKey(self.fed.seed * 100003 + self.server.round)
-        new_complex, new_simple_host, metrics = self._round_fn(
-            self.server.complex, self.server.simple_host, data_s, data_c,
-            key, self._flat_mask_arg())
-        self.server = ServerState(complex=new_complex,
-                                  simple_host=new_simple_host,
-                                  round=self.server.round + 1)
-        self.total_bytes += self.bytes_per_round
-        self.total_bytes_down += self.bytes_down_per_round
-        self.total_bytes_up += self.bytes_up_per_round
-        return {k: float(v) for k, v in metrics.items()}
+        obs = self.obs
+        obs.set_round(self.server.round)
+        with obs.span("round", engine="sync"):
+            with obs.span("sample_gather"):
+                simple_ids, complex_ids = self._sample_cohort()
+                data_s = self._gather(simple_ids)
+                data_c = self._gather(complex_ids)
+            key = jax.random.PRNGKey(
+                self.fed.seed * 100003 + self.server.round)
+            new_complex, new_simple_host, metrics = self._dispatch(
+                self.server.complex, self.server.simple_host, data_s,
+                data_c, key, self._flat_mask_arg())
+            self.server = ServerState(complex=new_complex,
+                                      simple_host=new_simple_host,
+                                      round=self.server.round + 1)
+            self.total_bytes += self.bytes_per_round
+            self.total_bytes_down += self.bytes_down_per_round
+            self.total_bytes_up += self.bytes_up_per_round
+            metrics = {k: float(v) for k, v in metrics.items()}
+            if obs.enabled:
+                (chunk_s, n_s), (chunk_c, n_c) = self._geometry()
+                emit_round_phases(obs, populations=[
+                    ("simple", self.k_simple, chunk_s, n_s, None),
+                    ("complex", self.k_complex, chunk_c, n_c, None)],
+                    bytes_down=self.bytes_down_per_round,
+                    wire=self.fed.comm_dtype)
+                self._emit_round_health(metrics)
+        return metrics
 
     def evaluate(self, test_batch: Batch) -> Dict[str, float]:
         """Server-model metrics.  For decouple, the simple accuracy comes
@@ -500,17 +669,30 @@ class FederatedTrainer:
             test_batch: Optional[Batch] = None,
             log: Optional[Callable[[str], None]] = None) -> List[Dict]:
         history = []
+        obs = self.obs
         for r in range(rounds):
             metrics = self.run_round()
             if eval_every and test_batch is not None and \
                     (r + 1) % eval_every == 0:
-                metrics.update(self.evaluate(test_batch))
+                ev = self.evaluate(test_batch)
+                metrics.update(ev)
+                # eval ledger is stamped with the COMPLETED round count
+                # (the log line's "round N") — rounds-to-target reads it
+                obs.set_round(self.server.round)
+                obs.ledger("eval", ev)
             metrics["round"] = self.server.round
             history.append(metrics)
-            if log and (eval_every and (r + 1) % eval_every == 0):
-                log(f"round {self.server.round}: " + ", ".join(
+            if (log or obs.enabled) and \
+                    (eval_every and (r + 1) % eval_every == 0):
+                line = f"round {self.server.round}: " + ", ".join(
                     f"{k}={v:.4f}" for k, v in metrics.items()
-                    if k != "round"))
+                    if k != "round")
+                # the legacy line, routed through the event stream: a
+                # StdoutSink prints exactly this string, so the printed
+                # format is bit-identical to the pre-telemetry driver
+                obs.log(line)
+                if log is not None:
+                    log(line)
         return history
 
 

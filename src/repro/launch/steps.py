@@ -28,6 +28,7 @@ from repro.core import aggregate, async_rounds, comm, flatten, masking
 from repro.core.adapters import LMAdapter
 from repro.models import transformer as tfm
 from repro.models.common import NO_POLICY, Policy
+from repro.obs import telemetry as obslib
 from repro.optim.sgd import sgd_update
 
 Tree = Any
@@ -53,7 +54,8 @@ def make_fed_round_step(cfg: ModelConfig, policy: Policy = NO_POLICY, *,
                         agg_engine: str = "flat", agg_block_n: int = 2048,
                         comm_dtype: str = "float32", quant_block: int = 128,
                         staleness_scheme: str = "poly",
-                        staleness_decay: float = 0.5):
+                        staleness_decay: float = 0.5,
+                        telemetry: Optional[obslib.Telemetry] = None):
     """One FedHeN round over a stacked cohort, streaming in chunks.
 
     Returns ``round_step(cohort, data, is_simple, flat_mask=None,
@@ -88,9 +90,27 @@ def make_fed_round_step(cfg: ModelConfig, policy: Policy = NO_POLICY, *,
     decay=staleness_decay)`` on the same masked-weight path NaN exclusion
     uses; ``None`` (and all-zero staleness) is exactly the synchronous
     fold.
+
+    ``telemetry`` (repro/obs; default: disabled) records ONE
+    ``round_step_build`` ledger with the step's static configuration —
+    the launch-side counterpart of the trainer's ``run_config`` event.
+    The returned ``round_step`` itself stays pure and jit-friendly:
+    callers jit it, so per-execution spans belong to the caller's host
+    loop, not inside the traced function.
     """
     adapter = LMAdapter(cfg, policy=policy, remat=True)
     wire = comm.WireSpec(comm_dtype, quant_block)
+    obs = obslib.coalesce(telemetry)
+    if obs.enabled:
+        values = {"local_steps": int(local_steps), "lr": lr,
+                  "clip_norm": clip_norm,
+                  "cohort_chunk": int(cohort_chunk),
+                  "staleness_scheme": staleness_scheme,
+                  "staleness_decay": staleness_decay}
+        values.update(aggregate.engine_attrs(
+            agg_engine, algorithm="fedhen", block_n=agg_block_n,
+            wire=wire))
+        obs.ledger("round_step_build", values)
 
     def constrain_cohort(tree):
         return jax.tree.map(

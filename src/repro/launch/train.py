@@ -33,9 +33,10 @@ from repro.core.adapters import LMAdapter, ResNetAdapter
 from repro.core.federated import FederatedTrainer, rounds_to_target
 from repro.data import federated as fed_data
 from repro.data.synthetic import synthetic_cifar, synthetic_lm
+from repro.obs import telemetry as obslib
 
 
-def build_trainer(args) -> tuple:
+def build_trainer(args, telemetry=None) -> tuple:
     fed = FedConfig(
         n_devices=args.clients, n_simple=args.clients // 2,
         participation=args.participation, rounds=args.rounds,
@@ -73,7 +74,7 @@ def build_trainer(args) -> tuple:
     shards = split(data, fed.n_devices, args.seed + 1)
     shards = [{k: jnp.asarray(v) for k, v in s.items() if k != "labels"
                or args.model == "resnet"} for s in shards]
-    trainer = FederatedTrainer(adapter, fed, shards)
+    trainer = FederatedTrainer(adapter, fed, shards, telemetry=telemetry)
     return trainer, test_batch
 
 
@@ -150,28 +151,48 @@ def main(argv=None):
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--target-simple", type=float, default=0.0)
     ap.add_argument("--history-out", default="")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="instrument the run with the repro/obs telemetry "
+                         "layer (round-phase spans, client-health "
+                         "counters, comm/roofline ledgers); off by "
+                         "default — the trainer runs the no-op path")
+    ap.add_argument("--telemetry-out", default="",
+                    help="write the telemetry event stream as JSONL to "
+                         "this path (implies --telemetry; render it with "
+                         "tools/obs_report.py)")
     args = ap.parse_args(argv)
 
-    trainer, test_batch = build_trainer(args)
+    # the driver's prints always route through a telemetry stdout sink
+    # (line formats are bit-identical — the sink prints log events
+    # verbatim); the TRAINER is only instrumented when asked, so the
+    # library default stays the no-op path
+    instrument = args.telemetry or bool(args.telemetry_out)
+    tel = obslib.Telemetry([obslib.StdoutSink()])
+    if args.telemetry_out:
+        tel.add_sink(obslib.JsonlSink(args.telemetry_out))
+    say = tel.log
+
+    trainer, test_batch = build_trainer(
+        args, telemetry=tel if instrument else None)
     if args.cohort_chunk == "auto":
         per_mb = trainer.stream_bytes_per_client() / 2**20
-        print(f"cohort_chunk=auto -> {trainer.cohort_chunk} "
-              f"(per-client packed {per_mb:.2f} MiB at wire/stream dtype, "
-              f"budget {args.agg_memory_budget_mb:.0f} MiB)")
+        say(f"cohort_chunk=auto -> {trainer.cohort_chunk} "
+            f"(per-client packed {per_mb:.2f} MiB at wire/stream dtype, "
+            f"budget {args.agg_memory_budget_mb:.0f} MiB)")
     if args.async_lag:
         eng = trainer.async_engine
         steady = eng.schedule(10**9)
-        print(f"async rounds: lag={eng.lag} folds/round="
-              f"{eng.folds_per_round} versions={eng.n_versions} "
-              f"staleness/chunk={list(map(int, steady[0]))} + "
-              f"{list(map(int, steady[1]))} "
-              f"(weights {args.staleness}, a={args.staleness_decay})")
+        say(f"async rounds: lag={eng.lag} folds/round="
+            f"{eng.folds_per_round} versions={eng.n_versions} "
+            f"staleness/chunk={list(map(int, steady[0]))} + "
+            f"{list(map(int, steady[1]))} "
+            f"(weights {args.staleness}, a={args.staleness_decay})")
     if args.comm_dtype != "float32":
-        print(f"comm wire {args.comm_dtype}: "
-              f"{trainer.bytes_per_round / 1e6:.3f} MB/round measured "
-              f"(down {trainer.bytes_down_per_round / 1e6:.3f} + up "
-              f"{trainer.bytes_up_per_round / 1e6:.3f}; f32 analytic "
-              f"{trainer.analytic_bytes_per_round() / 1e6:.3f})")
+        say(f"comm wire {args.comm_dtype}: "
+            f"{trainer.bytes_per_round / 1e6:.3f} MB/round measured "
+            f"(down {trainer.bytes_down_per_round / 1e6:.3f} + up "
+            f"{trainer.bytes_up_per_round / 1e6:.3f}; f32 analytic "
+            f"{trainer.analytic_bytes_per_round() / 1e6:.3f})")
     if args.resume and args.checkpoint and os.path.exists(args.checkpoint):
         if args.checkpoint_format == "flat":
             trainer.server = restore_server_flat(args.checkpoint,
@@ -179,16 +200,20 @@ def main(argv=None):
                                                  trainer.layout)
         else:
             trainer.server = restore_server(args.checkpoint, trainer.server)
-        print(f"resumed from round {trainer.server.round}")
+        say(f"resumed from round {trainer.server.round}")
 
     t0 = time.time()
     history = []
     for r in range(trainer.server.round, args.rounds):
         m = trainer.run_round()
         if args.eval_every and (r + 1) % args.eval_every == 0:
-            m.update(trainer.evaluate(test_batch))
-            print(f"[round {r + 1:4d}] " + "  ".join(
-                f"{k}={v:.4f}" for k, v in sorted(m.items())), flush=True)
+            ev = trainer.evaluate(test_batch)
+            m.update(ev)
+            if instrument:
+                tel.set_round(r + 1)
+                tel.ledger("eval", ev)
+            say(f"[round {r + 1:4d}] " + "  ".join(
+                f"{k}={v:.4f}" for k, v in sorted(m.items())))
         m["round"] = r + 1
         history.append(m)
         if args.checkpoint and args.checkpoint_every and \
@@ -200,14 +225,18 @@ def main(argv=None):
                 save_server(args.checkpoint, trainer.server)
 
     dt = time.time() - t0
-    print(f"\n{args.algorithm}: {args.rounds} rounds in {dt:.1f}s "
-          f"({trainer.total_bytes / 1e6:.1f} MB communicated)")
+    say(f"\n{args.algorithm}: {args.rounds} rounds in {dt:.1f}s "
+        f"({trainer.total_bytes / 1e6:.1f} MB communicated)")
     if args.target_simple:
         r = rounds_to_target(history, "acc_simple", args.target_simple)
-        print(f"rounds to simple acc {args.target_simple}: {r}")
+        say(f"rounds to simple acc {args.target_simple}: {r}")
     if args.history_out:
         with open(args.history_out, "w") as f:
             json.dump(history, f, indent=1)
+    tel.close()
+    if args.telemetry_out:
+        print(f"telemetry run log: {args.telemetry_out} "
+              f"(render: python tools/obs_report.py {args.telemetry_out})")
     return history
 
 

@@ -1,0 +1,23 @@
+"""Observability: structured telemetry for the federated training stack.
+
+Public surface:
+
+* :mod:`repro.obs.telemetry` — the event registry (:class:`Telemetry`),
+  sinks (:class:`MemorySink`, :class:`JsonlSink`, :class:`StdoutSink`,
+  :class:`NullSink`), and the disabled :data:`NOOP` singleton.
+* :mod:`repro.obs.report` — renders a JSONL run log into the
+  human-readable summary ``tools/obs_report.py`` prints.
+"""
+
+from repro.obs.telemetry import (  # noqa: F401
+    NOOP,
+    JsonlSink,
+    MemorySink,
+    NullSink,
+    Sink,
+    StdoutSink,
+    Telemetry,
+    coalesce,
+    jsonable,
+    read_jsonl,
+)

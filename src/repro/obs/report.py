@@ -1,0 +1,227 @@
+"""Render a telemetry JSONL run log into a human-readable summary.
+
+The logic lives here (importable, unit-tested); ``tools/obs_report.py``
+is a thin CLI wrapper.  Input is the event stream a :class:`JsonlSink`
+wrote — see :mod:`repro.obs.telemetry` for the schema.  Output sections:
+
+* **run** — the ``run_config`` ledger (algorithm, cohort geometry, wire).
+* **rounds** — count, median/total wall clock per phase from the timed
+  spans, and the first round's compile-vs-execute split.
+* **comm** — bytes/round (down, up) and cumulative totals from the
+  ``comm_bytes`` ledgers, exactly the trainer's measured accounting.
+* **client health** — NaN-excluded device total, weight-0 padding slots,
+  the merged staleness histogram, and version-cache hit/miss counts.
+* **progress** — eval-metric trajectory from ``eval`` ledgers and, when
+  a target is given, rounds-to-target — the headline FedHeN comparison
+  number.  Direction is inferred from the metric name: ``acc*``/``*acc*``
+  metrics count as reached at-or-above the target, everything else
+  (losses) at-or-below.
+
+Everything here is stdlib-only and tolerant of partial logs: a crashed
+run renders whatever was flushed.
+"""
+
+from __future__ import annotations
+
+import statistics
+from typing import Any, Dict, List, Optional
+
+from repro.obs.telemetry import read_jsonl
+
+
+def _median(xs: List[float]) -> Optional[float]:
+    return statistics.median(xs) if xs else None
+
+
+def summarize(events: List[Dict[str, Any]],
+              target: Optional[float] = None,
+              target_metric: str = "loss_complex") -> Dict[str, Any]:
+    """Digest an event stream into the report's section dict."""
+    spans = [e for e in events if e.get("kind") == "span"]
+    counters = [e for e in events if e.get("kind") == "counter"]
+    ledgers = [e for e in events if e.get("kind") == "ledger"]
+
+    def ledger_values(name: str) -> List[Dict[str, Any]]:
+        return [e.get("values", {}) for e in ledgers if e.get("name") == name]
+
+    # -- run config (first wins; there is one per run) ----------------------
+    run_cfgs = ledger_values("run_config")
+    run_config = run_cfgs[0] if run_cfgs else {}
+
+    # -- spans: wall clock per phase name -----------------------------------
+    durs: Dict[str, List[float]] = {}
+    for s in spans:
+        if s.get("dur_s") is not None:
+            durs.setdefault(s["name"], []).append(float(s["dur_s"]))
+    phase_wall = {
+        name: {"n": len(xs), "median_s": _median(xs), "total_s": sum(xs)}
+        for name, xs in sorted(durs.items())
+    }
+    rounds_seen = sorted({s["round"] for s in spans
+                          if s.get("name") == "round"
+                          and s.get("round") is not None})
+    compile_s = sum(durs.get("compile", []))
+    trace_lower_s = sum(durs.get("trace_lower", []))
+    execute_med = _median(durs.get("execute", []))
+
+    # -- comm ledgers -------------------------------------------------------
+    comm = ledger_values("comm_bytes")
+    comm_summary: Dict[str, Any] = {}
+    if comm:
+        last = comm[-1]
+        comm_summary = {
+            "rounds_accounted": len(comm),
+            "bytes_down_per_round": _median(
+                [c["down"] for c in comm if "down" in c]),
+            "bytes_up_per_round": _median(
+                [c["up"] for c in comm if "up" in c]),
+            "cum_down": last.get("cum_down"),
+            "cum_up": last.get("cum_up"),
+            "cum_total": last.get("cum_total"),
+        }
+
+    # -- roofline (first-round lowered program) -----------------------------
+    rooflines = ledger_values("roofline")
+    roofline = rooflines[0] if rooflines else {}
+
+    # -- client health ------------------------------------------------------
+    def counter_total(name: str) -> int:
+        return int(sum(c.get("value", 0) for c in counters
+                       if c.get("name") == name))
+
+    staleness: Dict[str, int] = {}
+    for h in ledger_values("staleness_hist"):
+        for k, v in h.items():
+            staleness[k] = staleness.get(k, 0) + int(v)
+    health = {
+        "nan_excluded_devices": counter_total("nan_excluded_devices"),
+        "padding_weight0_clients": counter_total("padding_weight0_clients"),
+        "version_cache_hit": counter_total("version_cache_hit"),
+        "version_cache_miss": counter_total("version_cache_miss"),
+        "staleness_hist": dict(sorted(staleness.items(),
+                                      key=lambda kv: int(kv[0]))),
+    }
+
+    # -- progress / rounds-to-target ----------------------------------------
+    evals = [(e.get("round"), e.get("values", {}))
+             for e in ledgers if e.get("name") == "eval"]
+    trajectory = [(r, v.get(target_metric)) for r, v in evals
+                  if v.get(target_metric) is not None]
+    higher_is_better = "acc" in target_metric
+    rounds_to_target = None
+    if target is not None:
+        for r, v in trajectory:
+            if v is not None and (v >= target if higher_is_better
+                                  else v <= target):
+                rounds_to_target = r
+                break
+
+    return {
+        "run_config": run_config,
+        "rounds": {
+            "n_rounds": len(rounds_seen) or len(comm),
+            "phase_wall": phase_wall,
+            "compile_s": compile_s,
+            "trace_lower_s": trace_lower_s,
+            "execute_median_s": execute_med,
+        },
+        "comm": comm_summary,
+        "roofline": roofline,
+        "health": health,
+        "progress": {
+            "metric": target_metric,
+            "target": target,
+            "trajectory": trajectory,
+            "rounds_to_target": rounds_to_target,
+            "final": trajectory[-1][1] if trajectory else None,
+        },
+        "n_events": len(events),
+    }
+
+
+def _fmt_bytes(n: Optional[float]) -> str:
+    if n is None:
+        return "-"
+    n = float(n)
+    for unit in ("B", "KiB", "MiB", "GiB"):
+        if abs(n) < 1024 or unit == "GiB":
+            return f"{n:.1f} {unit}" if unit != "B" else f"{n:.0f} B"
+        n /= 1024
+    return f"{n:.1f} GiB"
+
+
+def _fmt_s(x: Optional[float]) -> str:
+    return "-" if x is None else f"{x:.3f}s"
+
+
+def render(summary: Dict[str, Any]) -> str:
+    """Format a :func:`summarize` dict as the printed report."""
+    lines: List[str] = []
+    add = lines.append
+    add("== telemetry run report ==")
+    add(f"events: {summary['n_events']}")
+
+    cfg = summary["run_config"]
+    if cfg:
+        add("")
+        add("-- run --")
+        for k in sorted(cfg):
+            add(f"  {k}: {cfg[k]}")
+
+    r = summary["rounds"]
+    add("")
+    add("-- rounds --")
+    add(f"  rounds: {r['n_rounds']}")
+    add(f"  compile (first round): {_fmt_s(r['compile_s'])} "
+        f"(trace+lower {_fmt_s(r['trace_lower_s'])})")
+    add(f"  execute median: {_fmt_s(r['execute_median_s'])}")
+    for name, w in r["phase_wall"].items():
+        add(f"  span {name}: n={w['n']} median={_fmt_s(w['median_s'])} "
+            f"total={_fmt_s(w['total_s'])}")
+
+    c = summary["comm"]
+    if c:
+        add("")
+        add("-- comm --")
+        add(f"  bytes/round down: {_fmt_bytes(c['bytes_down_per_round'])}  "
+            f"up: {_fmt_bytes(c['bytes_up_per_round'])}")
+        add(f"  cumulative: down {_fmt_bytes(c['cum_down'])}  "
+            f"up {_fmt_bytes(c['cum_up'])}  "
+            f"total {_fmt_bytes(c['cum_total'])}")
+
+    roof = summary["roofline"]
+    if roof:
+        add("")
+        add("-- roofline (lowered round) --")
+        for k in sorted(roof):
+            add(f"  {k}: {roof[k]}")
+
+    h = summary["health"]
+    add("")
+    add("-- client health --")
+    add(f"  NaN-excluded devices: {h['nan_excluded_devices']}")
+    add(f"  weight-0 padding slots: {h['padding_weight0_clients']}")
+    add(f"  version cache: {h['version_cache_hit']} hit / "
+        f"{h['version_cache_miss']} miss")
+    if h["staleness_hist"]:
+        hist = "  ".join(f"s={k}:{v}" for k, v in h["staleness_hist"].items())
+        add(f"  staleness histogram: {hist}")
+
+    p = summary["progress"]
+    if p["trajectory"]:
+        add("")
+        add("-- progress --")
+        add(f"  metric: {p['metric']}  final: {p['final']:.4f}")
+        if p["target"] is not None:
+            hit = p["rounds_to_target"]
+            add(f"  target {p['target']}: "
+                + (f"reached at round {hit}" if hit is not None
+                   else "not reached"))
+    return "\n".join(lines)
+
+
+def report_path(path: str, target: Optional[float] = None,
+                target_metric: str = "loss_complex") -> str:
+    """Read a JSONL run log and return the rendered report."""
+    return render(summarize(read_jsonl(path), target=target,
+                            target_metric=target_metric))

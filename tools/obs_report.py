@@ -1,0 +1,40 @@
+"""Render a telemetry JSONL run log as a human-readable summary.
+
+Thin CLI wrapper over :mod:`repro.obs.report` (the importable, tested
+logic).  Typical use, after a run with ``--telemetry --telemetry-out``:
+
+    PYTHONPATH=src python tools/obs_report.py run.jsonl
+    PYTHONPATH=src python tools/obs_report.py run.jsonl --target 0.15
+
+``--target`` reports rounds-to-target on ``--metric`` (default
+``loss_complex``) — the headline FedHeN comparison number.
+"""
+
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+
+sys.path.insert(
+    0, str(pathlib.Path(__file__).resolve().parent.parent / "src"))
+
+from repro.obs.report import report_path  # noqa: E402
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Render a telemetry JSONL run log")
+    ap.add_argument("jsonl", help="run log written by --telemetry-out")
+    ap.add_argument("--target", type=float, default=None,
+                    help="rounds-to-target threshold on --metric")
+    ap.add_argument("--metric", default="loss_complex",
+                    help="eval metric for --target (default: loss_complex)")
+    args = ap.parse_args(argv)
+    print(report_path(args.jsonl, target=args.target,
+                      target_metric=args.metric))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
