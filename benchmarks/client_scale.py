@@ -1,0 +1,156 @@
+"""Population-scale client service: O(cohort) per-round host cost, gated.
+
+The client registry tier (``core/sampling.py`` + ``core/client_state.py``)
+promises that the per-round HOST work — drawing the cohort, recording
+participation, version-tag download billing — costs O(cohort), not
+O(population): "millions of users" must be a config value, not a rewrite.
+This benchmark prices that promise by running the full host-side round
+path (uniform super-cohort ``plan`` -> ``record_round`` ->
+``bill_downloads``) at a FIXED cohort size while the client population
+grows 10^3 -> 10^6, and gating the wall-time flatness.
+
+Per row (one population size, label ``n1e3`` .. ``n1e6``):
+
+* ``sample_state_ms`` — min wall time of one full host round
+  (sample + record + bill) over ``--repeats`` timed loops of ``ROUNDS``
+  rounds each (min = the noise-robust estimator every bench here uses);
+* ``plan_ms`` — the sampling draw alone, same methodology;
+* ``state_bytes`` — the client-state matrix footprint
+  (``(N + 1) x width`` f64): deterministic, trend-gated by
+  ``bench_trend.py`` so the schema cannot silently widen.
+
+Own gate (script exit code): ``max(sample_state_ms) <=``
+``FLATNESS_LIMIT x min(sample_state_ms)`` across the population sweep —
+a 1000x population growth may cost at most 2x in per-round host time.
+An O(N) regression (a dict rebuild, a full-matrix copy, a
+``Generator.choice`` on the sparse path) blows this up by orders of
+magnitude, so the 2x ceiling is loose for noise yet tight for bugs.
+
+Run as a script to emit ``BENCH_clients.json`` and exit nonzero on a
+gate failure (the CI smoke): ``python benchmarks/client_scale.py --fast``.
+``--fast`` only trims repeats — the population sweep IS the gate, so all
+rows are always present.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core.client_state import ClientStateMatrix
+from repro.core.sampling import CohortSampler
+
+POPULATIONS = (10**3, 10**4, 10**5, 10**6)
+# fixed cohort: participation scales as COHORT / N.  128 keeps every
+# population on the SAME sampler code path (4k < n -> batched rejection):
+# at 256 the 10^3 row would take the dense partial-Fisher-Yates branch,
+# which is legitimately faster and would turn the flatness gate into a
+# code-path comparison instead of an O(N) growth detector.
+COHORT = 128
+ROUNDS = 50             # host rounds per timed loop
+FLATNESS_LIMIT = 2.0    # max/min sample_state_ms across the sweep
+NBYTES_DOWN = 1.0e6     # nominal per-client download (billing arithmetic
+                        # only — the cost being timed is the tag compare)
+
+
+def host_round(sampler: CohortSampler, state: ClientStateMatrix,
+               round_index: int) -> None:
+    """One round of the host-side client-service path: draw the uniform
+    super-cohort, record participation, bill version-tagged downloads
+    (every client fetches the fresh round tag — the worst billing case:
+    all misses, full scatter)."""
+    plan = sampler.plan(round_index)
+    ids = plan.real_ids()
+    state.record_round(ids, round_index)
+    state.bill_downloads(ids, np.full(ids.shape, float(round_index)),
+                         NBYTES_DOWN)
+
+
+def time_loop(fn, rounds: int, repeats: int) -> float:
+    """Min wall seconds of ``rounds`` calls of ``fn`` over ``repeats``
+    trials (per-round time = min / rounds)."""
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        for r in range(rounds):
+            fn(r)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def measure(repeats: int) -> List[Dict]:
+    rows = []
+    for n in POPULATIONS:
+        sampler = CohortSampler(n_devices=n, n_simple=n // 2,
+                                participation=COHORT / n, seed=7,
+                                uniform=True)
+        state = ClientStateMatrix(n)
+        # warmup: first-touch page faults on the state matrix + any
+        # numpy lazy init, outside the timed loops
+        host_round(sampler, state, 0)
+
+        plan_s = time_loop(lambda r: sampler.plan(r), ROUNDS, repeats)
+        full_s = time_loop(lambda r: host_round(sampler, state, r),
+                           ROUNDS, repeats)
+        rows.append({
+            "label": f"n1e{int(np.log10(n))}",
+            "n_clients": n,
+            "cohort": COHORT,
+            "k_super": sampler.k_super,
+            "plan_ms": plan_s / ROUNDS * 1e3,
+            "sample_state_ms": full_s / ROUNDS * 1e3,
+            "state_bytes": state.nbytes,
+        })
+    return rows
+
+
+def check_gates(rows: List[Dict]) -> List[str]:
+    times = [r["sample_state_ms"] for r in rows]
+    lo, hi = min(times), max(times)
+    failures = []
+    if hi > FLATNESS_LIMIT * lo:
+        failures.append(
+            f"per-round host time is not O(cohort): "
+            f"{hi:.4f} ms at worst vs {lo:.4f} ms at best "
+            f"(> {FLATNESS_LIMIT}x) across populations "
+            f"{[r['n_clients'] for r in rows]}")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="fewer timing repeats (CI smoke); the population "
+                         "sweep and the flatness gate are identical")
+    ap.add_argument("--out", default="BENCH_clients.json")
+    args = ap.parse_args(argv)
+
+    repeats = 3 if args.fast else 10
+    rows = measure(repeats)
+    payload = {
+        "bench": "client_scale",
+        "cohort": COHORT,
+        "flatness_limit": FLATNESS_LIMIT,
+        "rows": rows,
+    }
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=1)
+    for r in rows:
+        print(f"{r['label']:>6}: plan {r['plan_ms']:7.4f} ms  "
+              f"sample+state {r['sample_state_ms']:7.4f} ms/round  "
+              f"state {r['state_bytes'] / 2**20:8.2f} MiB")
+
+    failures = check_gates(rows)
+    if failures:
+        print(f"REGRESSION: {failures} (see {args.out})")
+        return 1
+    print(f"ok — wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

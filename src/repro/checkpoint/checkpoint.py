@@ -12,6 +12,12 @@ exactly; bf16/int8 wires make the checkpoint as lossy as the broadcast
 already is, at the matching size reduction.  The layout is rebuildable
 from the treedef alone (offsets are a pure function of treedef + shapes +
 block_n), so a flat checkpoint needs no per-leaf key schema.
+
+``save_trainer`` / ``restore_trainer`` wrap either format with the
+population-scale state a resumable run needs beyond the server tree: the
+cohort sampler's identity facts (validated on restore — the sampler is
+pure in ``(seed, round)``, so no RNG stream is saved) and the per-client
+state matrix (``core/client_state.py``) as a sidecar array.
 """
 
 from __future__ import annotations
@@ -53,7 +59,8 @@ def _savez_exact(path: str, arrays: Dict[str, np.ndarray]) -> None:
         np.savez(f, **arrays)
 
 
-def save_tree(path: str, tree: Tree, metadata: Optional[Dict] = None) -> None:
+def save_tree(path: str, tree: Tree, metadata: Optional[Dict] = None,
+              extra_arrays: Optional[Dict[str, np.ndarray]] = None) -> None:
     os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
     flat = _flatten_with_paths(tree)
     # bf16 isn't npz-native: stash as uint16 view + dtype tag
@@ -70,6 +77,10 @@ def save_tree(path: str, tree: Tree, metadata: Optional[Dict] = None) -> None:
     if metadata is not None:
         arrays["__meta__"] = np.frombuffer(
             json.dumps(metadata).encode(), dtype=np.uint8)
+    # sidecar arrays (dunder-named by convention, e.g. the per-client
+    # state matrix): stored verbatim next to the tree leaves; restore_tree
+    # ignores keys it was not asked for, so readers opt in
+    arrays.update(extra_arrays or {})
     _savez_exact(path, arrays)
 
 
@@ -98,12 +109,13 @@ def restore_tree(path: str, like: Tree) -> Tuple[Tree, Dict]:
         leaves_paths[1], [restored[k] for k in keys]), meta
 
 
-def save_server(path: str, server, extra_meta: Optional[Dict] = None) -> None:
+def save_server(path: str, server, extra_meta: Optional[Dict] = None,
+                extra_arrays: Optional[Dict[str, np.ndarray]] = None) -> None:
     tree = {"complex": server.complex}
     if server.simple_host is not None:
         tree["simple_host"] = server.simple_host
     meta = {"round": server.round, **(extra_meta or {})}
-    save_tree(path, tree, meta)
+    save_tree(path, tree, meta, extra_arrays=extra_arrays)
 
 
 def restore_server(path: str, server):
@@ -129,7 +141,9 @@ def _store_payload(arrays: Dict, name: str, payload: np.ndarray) -> None:
 
 
 def save_server_flat(path: str, server, layout, *, wire=None,
-                     extra_meta: Optional[Dict] = None) -> None:
+                     extra_meta: Optional[Dict] = None,
+                     extra_arrays: Optional[Dict[str, np.ndarray]] = None
+                     ) -> None:
     """Save the server state as wire-encoded flat buffers.
 
     ``layout`` is the trainer's static ``FlatLayout``; ``wire`` a
@@ -153,6 +167,7 @@ def save_server_flat(path: str, server, layout, *, wire=None,
             "parts": sorted(parts), **(extra_meta or {})}
     arrays["__meta__"] = np.frombuffer(
         json.dumps(meta).encode(), dtype=np.uint8)
+    arrays.update(extra_arrays or {})
     _savez_exact(path, arrays)
 
 
@@ -188,3 +203,69 @@ def restore_server_flat(path: str, server, layout):
     return ServerState(complex=trees["complex"],
                        simple_host=trees.get("simple_host"),
                        round=int(meta.get("round", 0)))
+
+
+# ---------------------------------------------------------------------------
+# Trainer checkpoints (server state + sampler identity + client state)
+# ---------------------------------------------------------------------------
+
+_CLIENT_STATE_KEY = "__client_state__"
+
+
+def save_trainer(path: str, trainer, *, fmt: str = "tree") -> None:
+    """Save a ``FederatedTrainer``'s full resumable state.
+
+    On top of the server tree (``fmt="tree"``) or wire-encoded flat
+    buffers (``fmt="flat"``), the checkpoint carries:
+
+    * the cohort sampler's identity facts (seed/mode/geometry) in meta —
+      the sampler is pure in ``(seed, round)``, so restoring the round
+      counter restores the cohort sequence; the facts exist so restore
+      can FAIL LOUDLY if the resuming config would draw different cohorts;
+    * the per-client state matrix (participation counters, version tags,
+      reserved columns) as a ``__client_state__`` sidecar array + its
+      column schema in meta, restored by name for schema compatibility.
+    """
+    extra_meta = {
+        "sampler": trainer.sampler.state_dict(),
+        "client_state_columns": list(trainer.client_state.columns),
+    }
+    extra_arrays = {
+        _CLIENT_STATE_KEY: np.asarray(trainer.client_state.array),
+    }
+    if fmt == "flat":
+        save_server_flat(path, trainer.server, trainer.layout,
+                         wire=trainer.wire, extra_meta=extra_meta,
+                         extra_arrays=extra_arrays)
+    elif fmt == "tree":
+        save_server(path, trainer.server, extra_meta=extra_meta,
+                    extra_arrays=extra_arrays)
+    else:
+        raise ValueError(f"unknown checkpoint format {fmt!r}")
+
+
+def restore_trainer(path: str, trainer, *, fmt: str = "tree") -> None:
+    """Restore ``save_trainer`` state in place (sets ``trainer.server``,
+    validates the sampler facts, reloads the client-state matrix).
+
+    Also accepts plain ``save_server``/``save_server_flat`` checkpoints
+    (pre-trainer-checkpoint runs): absent sampler meta validates
+    trivially and an absent client-state sidecar leaves the fresh matrix
+    in place.
+    """
+    if fmt == "flat":
+        trainer.server = restore_server_flat(path, trainer.server,
+                                             trainer.layout)
+    elif fmt == "tree":
+        trainer.server = restore_server(path, trainer.server)
+    else:
+        raise ValueError(f"unknown checkpoint format {fmt!r}")
+    with np.load(path) as data:
+        meta = (json.loads(bytes(data["__meta__"]).decode())
+                if "__meta__" in data else {})
+        trainer.sampler.validate_state(meta.get("sampler"))
+        if _CLIENT_STATE_KEY in data:
+            trainer.client_state.load(
+                data[_CLIENT_STATE_KEY],
+                meta.get("client_state_columns",
+                         list(trainer.client_state.columns)))

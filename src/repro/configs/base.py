@@ -298,6 +298,15 @@ class FedConfig:
     n_devices: int = 100           # total federated clients
     n_simple: int = 50             # first 50 simple, rest complex (paper)
     participation: float = 0.10    # 10% active per round
+    # Cohort sampling mode (core/sampling.py).  False (default): stratified
+    # per-population draws of max(round(participation * pop), 1) clients —
+    # the expectation of the paper's protocol, with every slot real (the
+    # pre-existing behavior, bit-parity-tested).  True: the paper's EXACT
+    # uniform sampling — one draw of ceil(participation * n_devices)
+    # clients over the whole population, routed into static per-arch slot
+    # blocks whose unfilled slots fold at weight 0 through the validity
+    # path (shapes stay static; loss/bytes use realized counts).
+    sample_uniform: bool = False
     rounds: int = 1000             # T
     local_epochs: int = 5          # E
     lr: float = 0.1                # eta

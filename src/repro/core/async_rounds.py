@@ -30,9 +30,14 @@ round jit the whole stack crosses the wire once
 (``comm.encode``/``decode`` batched over ``V`` — identical bits to the
 synchronous ``broadcast_roundtrip`` per version) and each chunk selects
 its version with one ``lax.dynamic_index_in_dim``.  Download accounting
-uses ``comm.VersionCache``: a client that already holds the version its
-chunk trains on is not billed again, so measured bytes stay truthful
-under stale-broadcast reuse.
+is version-aware: each client's last-fetched version tag lives in the
+trainer's per-client state matrix (``core.client_state``, the
+``version_tag`` column) and one vectorized tag-compare per round bills
+only the clients whose chunk trains on a version they do not hold —
+billing-identical to the retired per-client ``comm.VersionCache`` dict
+(parity-tested), but O(cohort) with no O(N_clients) host dict.  So
+measured bytes stay truthful under stale-broadcast reuse at any
+population size.
 
 **Staleness-weighted folds.**  A stale upload moved away from a model the
 server has since replaced; folding it at full weight drags the average
@@ -178,8 +183,8 @@ class AsyncRoundEngine:
         ``launch/train.py --resume``): the replaced state's history is
         unknown, so every slot becomes the current model — the same
         pre-history semantics a fresh engine starts with — and the
-        download cache is cleared (clients' cached version tags referred
-        to the discarded history)."""
+        clients' cached version tags are wiped (they referred to the
+        discarded history)."""
         tr = self.trainer
         flat = flatten.pack(self.layout, tr.server.complex)
         self.versions = jnp.tile(flat[None], (self.n_versions, 1))
@@ -187,9 +192,12 @@ class AsyncRoundEngine:
         if self.algo == "decouple":
             host = flatten.pack(self.layout, tr.server.simple_host)
             self.versions_host = jnp.tile(host[None], (self.n_versions, 1))
-        self.version_cache = comm.VersionCache()
-        # telemetry emits per-round hit/miss deltas; the cache counts
-        # cumulatively, so remember where the last round left off
+        tr.client_state.reset_version_tags()
+        # cumulative billing tallies (the retired VersionCache dict's
+        # counts, now engine-owned); telemetry emits per-round deltas, so
+        # also remember where the last round left off
+        self.cache_hits = 0
+        self.cache_misses = 0
         self._seen_cache_counts = (0, 0)
         self._published_server = tr.server
 
@@ -243,7 +251,11 @@ class AsyncRoundEngine:
                     x, idx, 0, keepdims=False), bcasts)
 
         def round_fn(versions, versions_host, data_s, data_c,
-                     rng, flat_mask, idx_s, w_s, idx_c, w_c):
+                     rng, flat_mask, idx_s, w_s, idx_c, w_c,
+                     real_s=None, real_c=None):
+            # real_s / real_c: super-cohort slot reality masks (uniform
+            # sampling mode only — absent, the traced program is exactly
+            # the pre-existing async round)
             agg_init, agg_fold, agg_finalize = make_agg(flat_mask)
             rs, rc = jax.random.split(rng)
             bcasts_c = decode_versions(versions)
@@ -255,13 +267,13 @@ class AsyncRoundEngine:
                 agg_fold, k=k_simple, chunk=self.chunk_s,
                 n_chunks=self.n_chunks_s, is_simple_flag=True,
                 skip_nan=fed.skip_nan_devices,
-                version_idx=idx_s, staleness_w=w_s)
+                version_idx=idx_s, staleness_w=w_s, real_mask=real_s)
             state, loss_c, valid_c = federated.stream_population(
                 state, version_select(bcasts_c), train_complex, data_c, rc,
                 agg_fold, k=k_complex, chunk=self.chunk_c,
                 n_chunks=self.n_chunks_c, is_simple_flag=False,
                 skip_nan=fed.skip_nan_devices,
-                version_idx=idx_c, staleness_w=w_c)
+                version_idx=idx_c, staleness_w=w_c, real_mask=real_c)
             new_complex, new_host = agg_finalize(state, template=template)
             # publish: roll the new round model into the version stack
             new_versions = jnp.concatenate(
@@ -281,21 +293,27 @@ class AsyncRoundEngine:
 
     # -- byte accounting (version-aware) -------------------------------------
 
-    def _bill_download(self, simple_ids, complex_ids, s_s, s_c,
-                       round_index: int) -> float:
+    def _bill_download(self, plan, s_s, s_c, round_index: int) -> float:
         """Measured download of one round: each real client fetches the
         version its chunk trains on — billed once per (client, version)
-        through the :class:`~repro.core.comm.VersionCache`, so cached
-        stale broadcasts cost 0.  Padding slots wrap real clients that
-        already fetched this round, so padding is never billed (same
-        contract as the synchronous accounting)."""
-        down = 0
-        for ids, staleness, chunk, nbytes in (
-                (simple_ids, s_s, self.chunk_s, self._per_simple),
-                (complex_ids, s_c, self.chunk_c, self._per_complex)):
-            for pos, cid in enumerate(ids):
-                tag = round_index - int(staleness[pos // chunk])
-                down += self.version_cache.bill(int(cid), tag, nbytes)
+        by the vectorized tag-compare on the trainer's client-state
+        matrix (``ClientStateMatrix.bill_downloads``), so cached stale
+        broadcasts cost 0.  Pad slots (super-cohort routing) wrap real
+        clients that already fetched this round, so padding is never
+        billed (same contract as the synchronous accounting)."""
+        down = 0.0
+        for ids, real, staleness, chunk, nbytes in (
+                (plan.simple_ids, plan.simple_real, s_s,
+                 self.chunk_s, self._per_simple),
+                (plan.complex_ids, plan.complex_real, s_c,
+                 self.chunk_c, self._per_complex)):
+            pos = np.arange(ids.size)
+            tags = round_index - np.asarray(staleness)[pos // chunk]
+            billed, hits, misses = self.trainer.client_state.bill_downloads(
+                ids[real], tags[real], nbytes)
+            down += billed
+            self.cache_hits += hits
+            self.cache_misses += misses
         return float(down)
 
     # -- public API ----------------------------------------------------------
@@ -312,13 +330,16 @@ class AsyncRoundEngine:
         s_s, s_c = self.schedule(r)
         w_s = staleness_weight(s_s, scheme=self.scheme, decay=self.decay)
         w_c = staleness_weight(s_c, scheme=self.scheme, decay=self.decay)
-        simple_ids, complex_ids = tr._sample_cohort()
+        plan = tr._sample_plan()
         key = jax.random.PRNGKey(tr.fed.seed * 100003 + r)
         args = (self.versions, self.versions_host,
-                tr._gather(simple_ids), tr._gather(complex_ids), key,
-                tr._flat_mask_arg(), jnp.asarray(s_s, jnp.int32), w_s,
+                tr._gather(plan.simple_ids), tr._gather(plan.complex_ids),
+                key, tr._flat_mask_arg(), jnp.asarray(s_s, jnp.int32), w_s,
                 jnp.asarray(s_c, jnp.int32), w_c)
-        return args, (simple_ids, complex_ids, s_s, s_c, r)
+        if tr.fed.sample_uniform:
+            args += (jnp.asarray(plan.simple_real),
+                     jnp.asarray(plan.complex_real))
+        return args, (plan, s_s, s_c, r)
 
     def lower_round(self):
         """AOT-lower the async round jit with this trainer's shapes (the
@@ -338,11 +359,10 @@ class AsyncRoundEngine:
             hist[int(s)] = hist.get(int(s), 0) + 1
         obs.ledger("staleness_hist",
                    {str(k): v for k, v in sorted(hist.items())})
-        cache = self.version_cache
         seen_h, seen_m = self._seen_cache_counts
-        obs.counter("version_cache_hit", cache.hits - seen_h)
-        obs.counter("version_cache_miss", cache.misses - seen_m)
-        self._seen_cache_counts = (cache.hits, cache.misses)
+        obs.counter("version_cache_hit", self.cache_hits - seen_h)
+        obs.counter("version_cache_miss", self.cache_misses - seen_m)
+        self._seen_cache_counts = (self.cache_hits, self.cache_misses)
 
     def run_round(self):
         """One async round: schedule staleness, train + fold the chunk
@@ -353,16 +373,16 @@ class AsyncRoundEngine:
         obs.set_round(tr.server.round)
         with obs.span("round", engine="async", lag=self.lag):
             with obs.span("sample_gather"):
-                args, (simple_ids, complex_ids, s_s, s_c, r) = \
-                    self._round_args()
+                args, (plan, s_s, s_c, r) = self._round_args()
             (new_complex, new_host, self.versions, self.versions_host,
              metrics) = self._dispatch(*args)
+            tr.client_state.record_round(plan.real_ids(), r)
             tr.server = federated.ServerState(
                 complex=new_complex, simple_host=new_host, round=r + 1)
             self._published_server = tr.server
-            down = self._bill_download(simple_ids, complex_ids, s_s, s_c, r)
-            up = float(tr.k_simple * self._per_simple
-                       + tr.k_complex * self._per_complex)
+            down = self._bill_download(plan, s_s, s_c, r)
+            up = float(plan.n_real_simple * self._per_simple
+                       + plan.n_real_complex * self._per_complex)
             self.last_bytes_down, self.last_bytes_up = down, up
             tr.total_bytes_down += down
             tr.total_bytes_up += up
@@ -376,5 +396,7 @@ class AsyncRoundEngine:
                      self.n_chunks_c, s_c)],
                     bytes_down=down, wire=tr.fed.comm_dtype)
                 self._emit_async_health(s_s, s_c)
-                tr._emit_round_health(metrics, down=down, up=up)
+                tr._emit_round_health(
+                    metrics, down=down, up=up,
+                    k_real=plan.n_real_simple + plan.n_real_complex)
         return metrics

@@ -1,0 +1,184 @@
+"""Sharded per-client state: one flat ``(N_clients + 1, width)`` matrix.
+
+Per-client bookkeeping used to live in Python dicts
+(``comm.VersionCache._held`` most prominently) — fine at 100 clients,
+a rewrite at the ROADMAP's "millions of users".  This module moves every
+per-client scalar the runtime tracks into ONE flat numpy matrix with a
+static column schema (the ``FlatLayout`` idea applied to the client
+axis): rounds touch it only through vectorized gather/scatter by the
+sampled ids, so per-round host cost is O(cohort) regardless of the
+population size (CI-gated flat from 10^3 to 10^6 clients by
+``benchmarks/client_scale.py``).
+
+**Column schema** (:data:`COLUMNS`, one f64 column each — exact for
+integer counters up to 2^53):
+
+* ``participation`` — rounds this client was sampled in (really
+  sampled: pad slots never count).  Feeds the unbiasedness telemetry
+  (participation histogram) and, later, importance-weighted sampling.
+* ``last_round``    — last round index the client participated in
+  (-1 = never).
+* ``version_tag``   — the server version tag this client last
+  downloaded (-1 = nothing cached).  Replaces the ``VersionCache`` dict
+  with one vectorized tag-compare per round (:meth:`bill_downloads`),
+  billing-identical to the dict (parity-tested).
+* ``ef_scale`` / ``cv_scale`` — RESERVED slots for the wire-compression
+  error-feedback residual norm and the SCAFFOLD control-variate norm
+  (ROADMAP items); zero until those land, but already checkpointed so
+  the schema is forward-compatible.
+
+**The sentinel row.**  The matrix has ``N + 1`` rows; row ``N`` is a
+scratch row that ids may legally point at when a caller wants a
+scatter target that must not alias any real client (pad-slot routing).
+Every read path masks it out.
+
+The matrix is **host state** (numpy, updated in place by fancy
+indexing): per-round updates touch O(cohort) rows with no O(N) copies —
+a device-resident jnp scatter would copy the whole matrix per round on
+backends without donation (CPU tier-1).  Round jits that need per-client
+columns (SCAFFOLD's control variates) take the O(cohort) ``gather`` of
+the sampled rows as an argument and return updated rows to ``scatter``
+back — the same in/out contract the cohort data already uses.
+Checkpointing ships the raw array + column list
+(``checkpoint.save_trainer``), restored by :meth:`load`.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Sequence, Tuple
+
+import numpy as np
+
+COLUMNS = ("participation", "last_round", "version_tag",
+           "ef_scale", "cv_scale")
+
+_PART = COLUMNS.index("participation")
+_LAST = COLUMNS.index("last_round")
+_TAG = COLUMNS.index("version_tag")
+
+NEVER = -1.0          # version_tag / last_round value for "no history"
+
+
+class ClientStateMatrix:
+    """All per-client runtime state as one flat host matrix.
+
+    Mutating methods take *unique* real client ids (one slot per client
+    per call — the sampler guarantees it; duplicate ids in one call
+    would collapse into one row update, like any scatter).
+    """
+
+    def __init__(self, n_clients: int):
+        if n_clients <= 0:
+            raise ValueError(f"n_clients must be > 0, got {n_clients}")
+        self.n_clients = int(n_clients)
+        self._m = np.zeros((self.n_clients + 1, len(COLUMNS)), np.float64)
+        self._m[:, _LAST] = NEVER
+        self._m[:, _TAG] = NEVER
+
+    # -- schema ---------------------------------------------------------------
+
+    @property
+    def columns(self) -> Tuple[str, ...]:
+        return COLUMNS
+
+    @property
+    def sentinel(self) -> int:
+        """The scratch row id pad slots may target."""
+        return self.n_clients
+
+    @property
+    def array(self) -> np.ndarray:
+        """The raw ``(N + 1, width)`` matrix (checkpoint payload)."""
+        return self._m
+
+    @property
+    def nbytes(self) -> int:
+        return self._m.nbytes
+
+    def column(self, name: str) -> np.ndarray:
+        """One column over the REAL clients (sentinel row excluded)."""
+        return self._m[:self.n_clients, COLUMNS.index(name)]
+
+    # -- per-round updates (O(cohort), vectorized) ---------------------------
+
+    def record_round(self, ids: np.ndarray, round_index: int) -> None:
+        """Mark ``ids`` (unique, real) as this round's participants."""
+        ids = np.asarray(ids, dtype=np.int64)
+        self._m[ids, _PART] += 1.0
+        self._m[ids, _LAST] = float(round_index)
+
+    def bill_downloads(self, ids: np.ndarray, tags: np.ndarray,
+                       nbytes: float) -> Tuple[float, int, int]:
+        """Vectorized version-tagged download billing.
+
+        Each client in ``ids`` (unique, real) fetches server version
+        ``tags[i]``; a client whose cached ``version_tag`` already
+        equals it is a cache *hit* (0 bytes — the stale-broadcast reuse
+        the async engine's measured savings come from), anything else a
+        *miss* billed ``nbytes`` and recorded.  Semantics are identical
+        to ``comm.VersionCache.bill`` called per client (parity-tested);
+        cost is one compare + one scatter over O(cohort) rows.
+
+        Returns ``(billed_bytes, hits, misses)``.
+        """
+        ids = np.asarray(ids, dtype=np.int64)
+        tags = np.asarray(tags, dtype=np.float64)
+        hit = self._m[ids, _TAG] == tags
+        misses = int(ids.size - hit.sum())
+        self._m[ids, _TAG] = tags
+        return float(misses * nbytes), int(hit.sum()), misses
+
+    def reset_version_tags(self) -> None:
+        """Forget every client's cached version (checkpoint restore /
+        external server replacement: the version history the tags
+        referred to is gone)."""
+        self._m[:, _TAG] = NEVER
+
+    # -- round-jit seam -------------------------------------------------------
+
+    def gather(self, ids: np.ndarray) -> np.ndarray:
+        """The sampled rows ``(k, width)`` — what a round jit consuming
+        per-client columns (SCAFFOLD, error feedback) takes as input."""
+        return self._m[np.asarray(ids, dtype=np.int64)]
+
+    def scatter(self, ids: np.ndarray, rows: np.ndarray) -> None:
+        """Write updated rows back (unique ids; sentinel row allowed —
+        it is scratch by contract)."""
+        self._m[np.asarray(ids, dtype=np.int64)] = rows
+
+    # -- telemetry ------------------------------------------------------------
+
+    def participation_histogram(self, max_bucket: int = 10) -> Dict[str, int]:
+        """``{participation count: n_clients}`` over real clients, counts
+        above ``max_bucket`` clamped into the last bucket (``"10+"``).
+        O(N) — called only on the telemetry-enabled path."""
+        part = np.minimum(self.column("participation").astype(np.int64),
+                          max_bucket)
+        counts = np.bincount(part, minlength=max_bucket + 1)
+        hist = {str(i): int(c) for i, c in enumerate(counts[:-1]) if c}
+        if counts[max_bucket]:
+            hist[f"{max_bucket}+"] = int(counts[max_bucket])
+        return hist
+
+    def tracked_clients(self) -> int:
+        """Clients that have participated at least once."""
+        return int((self.column("participation") > 0).sum())
+
+    # -- checkpoint integration ----------------------------------------------
+
+    def load(self, array: np.ndarray, columns: Sequence[str]) -> None:
+        """Restore from a checkpointed payload.  Columns are matched by
+        NAME so a checkpoint written under an older/newer schema restores
+        the columns both sides know (unknown new columns keep their
+        initialized defaults)."""
+        array = np.asarray(array, dtype=np.float64)
+        if array.shape[0] != self.n_clients + 1:
+            raise ValueError(
+                f"client-state size mismatch: checkpoint has "
+                f"{array.shape[0] - 1} clients, trainer {self.n_clients}")
+        if len(columns) != array.shape[1]:
+            raise ValueError(f"column list {list(columns)} does not match "
+                             f"payload width {array.shape[1]}")
+        for j, name in enumerate(columns):
+            if name in COLUMNS:
+                self._m[:, COLUMNS.index(name)] = array[:, j]

@@ -250,8 +250,16 @@ class VersionCache:
     synchronous numbers exactly.
 
     ``hits`` / ``misses`` count ``bill`` outcomes since construction —
-    the client-health telemetry reads them (a hit is a reused stale
-    broadcast, the async engine's measured savings).
+    a hit is a reused stale broadcast, the async engine's measured
+    savings.
+
+    **Retired from the round path.**  A per-client Python dict is
+    O(N_clients) host state; the runtime now keeps version tags in the
+    flat per-client state matrix (``core.client_state``, the
+    ``version_tag`` column) and bills one vectorized tag-compare per
+    round (``ClientStateMatrix.bill_downloads``).  This class stays as
+    the executable *reference semantics* the vectorized billing is
+    parity-tested against.
     """
 
     def __init__(self):

@@ -83,7 +83,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import FedConfig
-from repro.core import aggregate, comm, flatten, masking
+from repro.core import aggregate, client_state, comm, flatten, masking
+from repro.core import sampling
 from repro.obs import telemetry as obslib
 from repro.optim.sgd import sgd_update
 
@@ -151,7 +152,8 @@ def chunk_geometry(k: int, cohort_chunk: int) -> Tuple[int, int]:
 def stream_population(state, get_src, train_fn, data, key, agg_fold, *,
                       k: int, chunk: int, n_chunks: int,
                       is_simple_flag: bool, skip_nan: bool,
-                      version_idx=None, staleness_w=None):
+                      version_idx=None, staleness_w=None,
+                      real_mask=None):
     """Scan over one population's chunks: train + fold into running sums.
 
     The ONE chunk-stream implementation — the synchronous round and the
@@ -180,6 +182,12 @@ def stream_population(state, get_src, train_fn, data, key, agg_fold, *,
         and staleness coefficient (multiplied into validity as f32, the
         shared masked-weight path).  ``None``/``None`` keeps validity
         bool: the synchronous engine's exact program.
+      real_mask: optional ``(k,)`` bool — which of the ``k`` slots hold a
+        distinct sampled client (uniform super-cohort mode,
+        ``core/sampling.py``: unfilled slots wrap drawn ids and must fold
+        at weight 0).  ``None`` (stratified mode) keeps every slot real —
+        the exact pre-existing program, traced with no mask input.  The
+        mean loss normalizes by the realized client count.
 
     Returns: ``(state, mean_loss, n_valid)``.
     """
@@ -190,6 +198,11 @@ def stream_population(state, get_src, train_fn, data, key, agg_fold, *,
     keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(
         jnp.arange(k_pad))
     real = jnp.arange(k_pad) < k
+    denom = jnp.asarray(k, jnp.float32)
+    if real_mask is not None:
+        real = real & jnp.pad(jnp.asarray(real_mask, bool),
+                              (0, k_pad - k))
+        denom = jnp.maximum(jnp.sum(real.astype(jnp.float32)), 1.0)
 
     to_chunks = lambda x: x.reshape((n_chunks, chunk) + x.shape[1:])
     is_async = version_idx is not None
@@ -224,7 +237,7 @@ def stream_population(state, get_src, train_fn, data, key, agg_fold, *,
     zero = jnp.zeros((), jnp.float32)
     (state, loss_sum, valid_sum), _ = jax.lax.scan(
         fold_chunk, (state, zero, zero), xs)
-    return state, loss_sum / k, valid_sum
+    return state, loss_sum / denom, valid_sum
 
 
 # ---------------------------------------------------------------------------
@@ -347,16 +360,27 @@ class FederatedTrainer:
         # path (overhead CI-gated by benchmarks/obs_overhead.py)
         self.obs = obslib.coalesce(telemetry)
         self.client_data = client_data
-        self.rng = np.random.default_rng(fed.seed)
+        # cohort sampler (core/sampling.py): pure in (seed, round) — no
+        # sequential host RNG stream to checkpoint, so resume re-creates
+        # the uninterrupted run's cohort sequence exactly
+        self.sampler = sampling.CohortSampler(
+            n_devices=fed.n_devices, n_simple=fed.n_simple,
+            participation=fed.participation, seed=fed.seed,
+            uniform=fed.sample_uniform)
+        # sharded per-client state (core/client_state.py): participation,
+        # last round, version tags — ONE flat host matrix, O(cohort)/round
+        self.client_state = client_state.ClientStateMatrix(fed.n_devices)
         key = rng if rng is not None else jax.random.PRNGKey(fed.seed)
         self.server = ServerState(complex=adapter.init(key))
         if fed.algorithm == "decouple":
             self.server.simple_host = jax.tree.map(jnp.copy,
                                                    self.server.complex)
         self.mask = adapter.subnet_mask(self.server.complex)
-        self.k_simple = max(int(round(fed.participation * fed.n_simple)), 1)
-        n_complex = fed.n_devices - fed.n_simple
-        self.k_complex = max(int(round(fed.participation * n_complex)), 1)
+        # static per-population slot capacities (jit shapes): stratified
+        # keeps the old max(round(p * pop), 1); uniform splits the
+        # super-cohort into min(k_super, pop)-slot blocks
+        self.k_simple = self.sampler.cap_simple
+        self.k_complex = self.sampler.cap_complex
         # flat aggregation layout: built ONCE — offsets are static per
         # (treedef, leaf shapes, agg_block_n), valid for every round
         self.layout = flatten.build_layout(self.server.complex,
@@ -444,6 +468,17 @@ class FederatedTrainer:
                         + self.k_complex * self.per_complex_bytes)
         return one_way, one_way
 
+    def _round_bytes(self, plan: sampling.CohortPlan) -> Tuple[float, float]:
+        """(download, upload) bytes of ONE round under ``plan``.  With
+        every slot real (stratified mode, and full uniform rounds) this is
+        the static per-round constant; uniform rounds with pad slots bill
+        only the realized clients — a pad slot moves no bytes."""
+        if plan.all_real:
+            return self.bytes_down_per_round, self.bytes_up_per_round
+        one_way = float(plan.n_real_simple * self.per_simple_bytes
+                        + plan.n_real_complex * self.per_complex_bytes)
+        return one_way, one_way
+
     def analytic_bytes_per_round(self) -> float:
         """The pre-wire estimate (param counts x param itemsize, down+up)
         — kept as the consistency oracle for the measured numbers."""
@@ -477,6 +512,8 @@ class FederatedTrainer:
             "n_devices": fed.n_devices, "n_simple": fed.n_simple,
             "k_simple": self.k_simple, "k_complex": self.k_complex,
             "participation": fed.participation,
+            "sample_uniform": fed.sample_uniform,
+            "client_state_bytes": self.client_state.nbytes,
             "cohort_chunk": self.cohort_chunk,
             "n_chunks_simple": n_s, "n_chunks_complex": n_c,
             "comm_dtype": fed.comm_dtype,
@@ -493,24 +530,30 @@ class FederatedTrainer:
 
     def _emit_round_health(self, metrics: Dict[str, float], *,
                            down: Optional[float] = None,
-                           up: Optional[float] = None) -> None:
-        """Per-round client-health counters + the comm-bytes ledger.
+                           up: Optional[float] = None,
+                           k_real: Optional[int] = None) -> None:
+        """Per-round client-health counters + the comm/client-state ledgers.
 
         The counters surface what the validity-weight path folds away
         silently: devices excluded for NaNs this round and the weight-0
-        padding slots the chunk geometry adds.  The ledger repeats the
+        padding slots — both the chunk geometry's and (uniform mode) the
+        super-cohort's unfilled arch slots.  The comm ledger repeats the
         trainer's OWN accounting fields (cumulative totals included) so a
         run log is exactly reconcilable against ``total_bytes*`` — the
         async engine passes its version-aware ``down``/``up`` here, the
-        synchronous round uses its static per-round constants.
+        synchronous round uses ``_round_bytes``.  ``k_real`` is the
+        realized (non-pad) client count; ``None`` means every slot real.
         """
         (chunk_s, n_s), (chunk_c, n_c) = self._geometry()
         k = self.k_simple + self.k_complex
+        if k_real is None:
+            k_real = k
         obs = self.obs
-        obs.counter("nan_excluded_devices", k - int(metrics["n_valid"]))
+        obs.counter("nan_excluded_devices", k_real - int(metrics["n_valid"]))
         obs.counter("padding_weight0_clients",
                     (n_s * chunk_s - self.k_simple)
-                    + (n_c * chunk_c - self.k_complex))
+                    + (n_c * chunk_c - self.k_complex)
+                    + (k - k_real))
         obs.ledger("comm_bytes", {
             "down": self.bytes_down_per_round if down is None else down,
             "up": self.bytes_up_per_round if up is None else up,
@@ -518,6 +561,12 @@ class FederatedTrainer:
             "cum_up": self.total_bytes_up,
             "cum_total": self.total_bytes,
         })
+        obs.ledger("client_state", {
+            "state_bytes": self.client_state.nbytes,
+            "tracked_clients": self.client_state.tracked_clients(),
+        })
+        obs.ledger("participation_hist",
+                   self.client_state.participation_histogram())
 
     # -- the jitted round (streaming cohort engine) --------------------------
 
@@ -550,7 +599,12 @@ class FederatedTrainer:
 
         def round_fn(complex_params: Tree, simple_host: Optional[Tree],
                      data_s: Batch, data_c: Batch, rng: jax.Array,
-                     flat_mask: Optional[jax.Array]):
+                     flat_mask: Optional[jax.Array],
+                     real_s: Optional[jax.Array] = None,
+                     real_c: Optional[jax.Array] = None):
+            # real_s / real_c: per-slot reality masks (uniform
+            # super-cohort mode only — stratified rounds never pass them,
+            # keeping the traced program literally the pre-existing one)
             agg_init, agg_fold, agg_finalize = make_agg(flat_mask)
             rs, rc = jax.random.split(rng)
             # the server -> client broadcast crosses the wire: clients
@@ -566,12 +620,12 @@ class FederatedTrainer:
                 state, lambda _: src_simple, train_simple, data_s, rs,
                 agg_fold, k=self.k_simple, chunk=chunk_s,
                 n_chunks=n_chunks_s, is_simple_flag=True,
-                skip_nan=fed.skip_nan_devices)
+                skip_nan=fed.skip_nan_devices, real_mask=real_s)
             state, loss_c, valid_c = stream_population(
                 state, lambda _: bc_complex, train_complex, data_c, rc,
                 agg_fold, k=self.k_complex, chunk=chunk_c,
                 n_chunks=n_chunks_c, is_simple_flag=False,
-                skip_nan=fed.skip_nan_devices)
+                skip_nan=fed.skip_nan_devices, real_mask=real_c)
             new_complex, new_simple_host = agg_finalize(
                 state, template=complex_params)
             metrics = {"loss_simple": loss_s,
@@ -583,13 +637,17 @@ class FederatedTrainer:
 
     # -- sampling + gather (host side; this is the "data loading" tier) -----
 
+    def _sample_plan(self) -> sampling.CohortPlan:
+        """This round's cohort — pure in ``(fed.seed, server.round)``, so
+        a checkpoint restore that recovers the round counter recovers the
+        cohort sequence (no sampler RNG state exists to lose)."""
+        return self.sampler.plan(self.server.round)
+
     def _sample_cohort(self):
-        fed = self.fed
-        simple_ids = self.rng.choice(fed.n_simple, self.k_simple,
-                                     replace=False)
-        complex_ids = fed.n_simple + self.rng.choice(
-            fed.n_devices - fed.n_simple, self.k_complex, replace=False)
-        return simple_ids, complex_ids
+        """(simple_ids, complex_ids) of this round's plan — the slot-block
+        view (pad slots included in uniform mode)."""
+        plan = self._sample_plan()
+        return plan.simple_ids, plan.complex_ids
 
     def _gather(self, ids) -> Batch:
         datasets = [self.client_data[i] for i in ids]
@@ -612,12 +670,15 @@ class FederatedTrainer:
         """
         if self.async_engine is not None:
             return self.async_engine.lower_round()
-        simple_ids, complex_ids = self._sample_cohort()
+        plan = self._sample_plan()
         key = jax.random.PRNGKey(self.fed.seed * 100003 + self.server.round)
-        return self._round_fn.lower(
-            self.server.complex, self.server.simple_host,
-            self._gather(simple_ids), self._gather(complex_ids), key,
-            self._flat_mask_arg())
+        args = (self.server.complex, self.server.simple_host,
+                self._gather(plan.simple_ids), self._gather(plan.complex_ids),
+                key, self._flat_mask_arg())
+        if self.fed.sample_uniform:
+            args += (jnp.asarray(plan.simple_real),
+                     jnp.asarray(plan.complex_real))
+        return self._round_fn.lower(*args)
 
     def run_round(self) -> Dict[str, float]:
         if self.async_engine is not None:
@@ -626,29 +687,36 @@ class FederatedTrainer:
         obs.set_round(self.server.round)
         with obs.span("round", engine="sync"):
             with obs.span("sample_gather"):
-                simple_ids, complex_ids = self._sample_cohort()
-                data_s = self._gather(simple_ids)
-                data_c = self._gather(complex_ids)
+                plan = self._sample_plan()
+                data_s = self._gather(plan.simple_ids)
+                data_c = self._gather(plan.complex_ids)
             key = jax.random.PRNGKey(
                 self.fed.seed * 100003 + self.server.round)
-            new_complex, new_simple_host, metrics = self._dispatch(
-                self.server.complex, self.server.simple_host, data_s,
-                data_c, key, self._flat_mask_arg())
+            args = (self.server.complex, self.server.simple_host, data_s,
+                    data_c, key, self._flat_mask_arg())
+            if self.fed.sample_uniform:
+                args += (jnp.asarray(plan.simple_real),
+                         jnp.asarray(plan.complex_real))
+            new_complex, new_simple_host, metrics = self._dispatch(*args)
+            self.client_state.record_round(plan.real_ids(),
+                                           plan.round_index)
             self.server = ServerState(complex=new_complex,
                                       simple_host=new_simple_host,
                                       round=self.server.round + 1)
-            self.total_bytes += self.bytes_per_round
-            self.total_bytes_down += self.bytes_down_per_round
-            self.total_bytes_up += self.bytes_up_per_round
+            down, up = self._round_bytes(plan)
+            self.total_bytes += down + up
+            self.total_bytes_down += down
+            self.total_bytes_up += up
             metrics = {k: float(v) for k, v in metrics.items()}
             if obs.enabled:
                 (chunk_s, n_s), (chunk_c, n_c) = self._geometry()
                 emit_round_phases(obs, populations=[
                     ("simple", self.k_simple, chunk_s, n_s, None),
                     ("complex", self.k_complex, chunk_c, n_c, None)],
-                    bytes_down=self.bytes_down_per_round,
-                    wire=self.fed.comm_dtype)
-                self._emit_round_health(metrics)
+                    bytes_down=down, wire=self.fed.comm_dtype)
+                self._emit_round_health(
+                    metrics, down=down, up=up,
+                    k_real=plan.n_real_simple + plan.n_real_complex)
         return metrics
 
     def evaluate(self, test_batch: Batch) -> Dict[str, float]:
@@ -697,8 +765,15 @@ class FederatedTrainer:
 
 
 def rounds_to_target(history: List[Dict], key: str, target: float) -> int:
-    """Paper's evaluation metric: first round reaching the target accuracy."""
+    """Paper's evaluation metric: first round reaching the target.
+
+    Direction is inferred from the metric name (``obs.report``'s rule —
+    the one inference, shared): accuracy-like metrics are reached
+    at-or-above the target, loss-like metrics at-or-below."""
+    from repro.obs.report import higher_is_better
+    maximize = higher_is_better(key)
     for h in history:
-        if key in h and h[key] >= target:
+        if key in h and (h[key] >= target if maximize
+                         else h[key] <= target):
             return h["round"]
     return -1

@@ -40,17 +40,26 @@ def dirichlet_split(data: Batch, n_clients: int, alpha: float,
     shards = []
     for i in range(n_clients):
         props = rng.dirichlet(np.full(len(classes), alpha))
-        counts = np.floor(props * per).astype(int)
-        counts[-1] = per - counts[:-1].sum()
+        # largest-remainder rounding: hand the floor-rounding shortfall to
+        # the classes with the largest fractional parts (dumping it all on
+        # the last class would bias its realized marginal high)
+        ideal = props * per
+        counts = np.floor(ideal).astype(int)
+        short = per - counts.sum()
+        if short:
+            order = np.argsort(-(ideal - counts))
+            counts[order[:short]] += 1
         take: List[int] = []
         for c, k in zip(classes, counts):
             pool = pools[c]
             got = pool[:k]
             pools[c] = pool[k:]
             take.extend(got)
-        # top up from any remaining indices if classes ran dry
+        # top up from any remaining indices if classes ran dry — in a
+        # fresh random class order each pass, so the top-up surplus does
+        # not systematically favor the low class ids
         while len(take) < per:
-            for c in classes:
+            for c in rng.permutation(classes):
                 if pools[c]:
                     take.append(pools[c].pop())
                     if len(take) == per:
@@ -66,4 +75,6 @@ def label_distribution(shards: List[Batch], n_classes: int,
     for i, s in enumerate(shards):
         lab, cnt = np.unique(s[label_key], return_counts=True)
         out[i, lab] = cnt
-    return out / out.sum(1, keepdims=True)
+    # an empty shard has no distribution: keep its row zero, not NaN
+    totals = out.sum(1, keepdims=True)
+    return out / np.maximum(totals, 1.0)

@@ -59,8 +59,8 @@ def make_fed_round_step(cfg: ModelConfig, policy: Policy = NO_POLICY, *,
     """One FedHeN round over a stacked cohort, streaming in chunks.
 
     Returns ``round_step(cohort, data, is_simple, flat_mask=None,
-    staleness=None) -> (new_complex, loss)`` with ``cohort`` stacked
-    client params (K, ...),
+    staleness=None, real=None) -> (new_complex, loss)`` with ``cohort``
+    stacked client params (K, ...),
     ``data`` of shape (K, B, local_steps, S+1) and ``is_simple`` (K,).
     ``cohort_chunk`` must divide K (0 = one chunk); the engine scans chunk
     by chunk, folding each trained chunk into running masked sums — the
@@ -90,6 +90,14 @@ def make_fed_round_step(cfg: ModelConfig, policy: Policy = NO_POLICY, *,
     decay=staleness_decay)`` on the same masked-weight path NaN exclusion
     uses; ``None`` (and all-zero staleness) is exactly the synchronous
     fold.
+
+    ``real`` is the uniform super-cohort sampler's seam
+    (``core/sampling.py`` draws the plan; a launch driver passes
+    ``plan.simple_real``/``plan.complex_real`` concatenated in slot
+    order): a ``(K,)`` bool marking slots that hold a distinct sampled
+    client.  Pad slots (``False``) fold at weight 0 through the same
+    path and are excluded from the loss mean; ``None`` (stratified
+    cohorts) means every slot is real — the unchanged program.
 
     ``telemetry`` (repro/obs; default: disabled) records ONE
     ``round_step_build`` ledger with the step's static configuration —
@@ -133,7 +141,8 @@ def make_fed_round_step(cfg: ModelConfig, policy: Policy = NO_POLICY, *,
 
     def round_step(cohort: Tree, data: jax.Array, is_simple: jax.Array,
                    flat_mask: Optional[jax.Array] = None,
-                   staleness: Optional[jax.Array] = None):
+                   staleness: Optional[jax.Array] = None,
+                   real: Optional[jax.Array] = None):
         k = data.shape[0]
         chunk = k if cohort_chunk <= 0 else cohort_chunk
         if k % chunk:
@@ -156,27 +165,39 @@ def make_fed_round_step(cfg: ModelConfig, policy: Policy = NO_POLICY, *,
         else:
             st_w = async_rounds.staleness_weight(
                 staleness, scheme=staleness_scheme, decay=staleness_decay)
+        if real is not None:
+            # super-cohort pad slots: weight 0 in the fold, out of the loss
+            st_w = st_w * real.astype(jnp.float32)
+        denom = (jnp.asarray(k, jnp.float32) if real is None
+                 else jnp.maximum(jnp.sum(real.astype(jnp.float32)), 1.0))
 
         to_chunks = lambda x: x.reshape((n_chunks, chunk) + x.shape[1:])
         xs = (jax.tree.map(to_chunks, cohort), to_chunks(data),
               to_chunks(is_simple), to_chunks(st_w))
+        if real is not None:
+            xs = xs + (to_chunks(real),)
 
         def fold_chunk(carry, xs):
             state, loss_sum = carry
-            cohort_i, data_i, simple_i, st_w_i = xs
+            if real is None:
+                cohort_i, data_i, simple_i, st_w_i = xs
+            else:
+                cohort_i, data_i, simple_i, st_w_i, real_i = xs
             cohort_i = constrain_cohort(cohort_i)
             trained, losses = jax.vmap(client_train)(
                 cohort_i, data_i.transpose(0, 2, 1, 3), simple_i)
             valid = jax.vmap(masking.tree_isfinite)(trained)
             state = agg_fold(state, trained, simple_i,
                              valid.astype(jnp.float32) * st_w_i)
+            if real is not None:
+                losses = jnp.where(real_i, losses, 0.0)
             return (state, loss_sum + jnp.sum(losses)), None
 
         state = agg_init(template)
         (state, loss_sum), _ = jax.lax.scan(
             fold_chunk, (state, jnp.zeros((), jnp.float32)), xs)
         new_complex, _ = agg_finalize(state, template=template)
-        return new_complex, loss_sum / k
+        return new_complex, loss_sum / denom
 
     return round_step
 

@@ -26,8 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
-from repro.checkpoint.checkpoint import (restore_server, restore_server_flat,
-                                         save_server, save_server_flat)
+from repro.checkpoint.checkpoint import restore_trainer, save_trainer
 from repro.configs.base import FedConfig
 from repro.core.adapters import LMAdapter, ResNetAdapter
 from repro.core.federated import FederatedTrainer, rounds_to_target
@@ -44,6 +43,7 @@ def build_trainer(args, telemetry=None) -> tuple:
         batch_size=args.batch_size, iid=not args.non_iid,
         dirichlet_alpha=args.alpha, algorithm=args.algorithm,
         seed=args.seed, cohort_chunk=args.cohort_chunk,
+        sample_uniform=args.sample_uniform,
         agg_engine=args.agg_engine, agg_block_n=args.agg_block_n,
         agg_stream_dtype=args.agg_stream_dtype,
         agg_memory_budget_mb=args.agg_memory_budget_mb,
@@ -93,6 +93,13 @@ def main(argv=None):
     ap.add_argument("--rounds", type=int, default=20)
     ap.add_argument("--clients", type=int, default=20)
     ap.add_argument("--participation", type=float, default=0.1)
+    ap.add_argument("--sample-uniform", action="store_true",
+                    help="the paper's exact uniform cohort sampling: one "
+                         "draw of ceil(participation*clients) over the "
+                         "whole population, routed into static per-arch "
+                         "slots (unfilled slots fold at weight 0); "
+                         "default is the stratified per-arch "
+                         "approximation")
     ap.add_argument("--cohort-chunk", type=_chunk_arg, default=0,
                     help="stream the cohort in chunks of this many clients "
                          "(0 = whole cohort at once; 'auto' = derive from "
@@ -194,12 +201,12 @@ def main(argv=None):
             f"{trainer.bytes_up_per_round / 1e6:.3f}; f32 analytic "
             f"{trainer.analytic_bytes_per_round() / 1e6:.3f})")
     if args.resume and args.checkpoint and os.path.exists(args.checkpoint):
-        if args.checkpoint_format == "flat":
-            trainer.server = restore_server_flat(args.checkpoint,
-                                                 trainer.server,
-                                                 trainer.layout)
-        else:
-            trainer.server = restore_server(args.checkpoint, trainer.server)
+        # trainer-level restore: server state + sampler validation +
+        # client-state matrix.  The sampler is pure in (seed, round), so
+        # restoring the round counter resumes the exact cohort sequence
+        # an uninterrupted run would have drawn (test-enforced).
+        restore_trainer(args.checkpoint, trainer,
+                        fmt=args.checkpoint_format)
         say(f"resumed from round {trainer.server.round}")
 
     t0 = time.time()
@@ -218,11 +225,8 @@ def main(argv=None):
         history.append(m)
         if args.checkpoint and args.checkpoint_every and \
                 (r + 1) % args.checkpoint_every == 0:
-            if args.checkpoint_format == "flat":
-                save_server_flat(args.checkpoint, trainer.server,
-                                 trainer.layout, wire=trainer.wire)
-            else:
-                save_server(args.checkpoint, trainer.server)
+            save_trainer(args.checkpoint, trainer,
+                         fmt=args.checkpoint_format)
 
     dt = time.time() - t0
     say(f"\n{args.algorithm}: {args.rounds} rounds in {dt:.1f}s "

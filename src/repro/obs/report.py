@@ -33,6 +33,15 @@ def _median(xs: List[float]) -> Optional[float]:
     return statistics.median(xs) if xs else None
 
 
+def higher_is_better(metric: str) -> bool:
+    """Target direction inferred from the metric name: ``acc``-bearing
+    metrics maximize (reached at-or-above), everything else — losses —
+    minimizes (reached at-or-below).  Shared with
+    ``core.federated.rounds_to_target`` so a run report and the in-process
+    history agree on what "reached" means."""
+    return "acc" in metric
+
+
 def summarize(events: List[Dict[str, Any]],
               target: Optional[float] = None,
               target_metric: str = "loss_complex") -> Dict[str, Any]:
@@ -93,6 +102,10 @@ def summarize(events: List[Dict[str, Any]],
     for h in ledger_values("staleness_hist"):
         for k, v in h.items():
             staleness[k] = staleness.get(k, 0) + int(v)
+    # participation histogram: last wins (cumulative over the run, unlike
+    # the per-round staleness histograms which sum)
+    part_hists = ledger_values("participation_hist")
+    states = ledger_values("client_state")
     health = {
         "nan_excluded_devices": counter_total("nan_excluded_devices"),
         "padding_weight0_clients": counter_total("padding_weight0_clients"),
@@ -100,6 +113,9 @@ def summarize(events: List[Dict[str, Any]],
         "version_cache_miss": counter_total("version_cache_miss"),
         "staleness_hist": dict(sorted(staleness.items(),
                                       key=lambda kv: int(kv[0]))),
+        "participation_hist": part_hists[-1] if part_hists else {},
+        "client_state_bytes": (states[-1].get("state_bytes")
+                               if states else None),
     }
 
     # -- progress / rounds-to-target ----------------------------------------
@@ -107,11 +123,11 @@ def summarize(events: List[Dict[str, Any]],
              for e in ledgers if e.get("name") == "eval"]
     trajectory = [(r, v.get(target_metric)) for r, v in evals
                   if v.get(target_metric) is not None]
-    higher_is_better = "acc" in target_metric
+    maximize = higher_is_better(target_metric)
     rounds_to_target = None
     if target is not None:
         for r, v in trajectory:
-            if v is not None and (v >= target if higher_is_better
+            if v is not None and (v >= target if maximize
                                   else v <= target):
                 rounds_to_target = r
                 break
@@ -206,6 +222,12 @@ def render(summary: Dict[str, Any]) -> str:
     if h["staleness_hist"]:
         hist = "  ".join(f"s={k}:{v}" for k, v in h["staleness_hist"].items())
         add(f"  staleness histogram: {hist}")
+    if h.get("participation_hist"):
+        hist = "  ".join(f"n={k}:{v}"
+                         for k, v in h["participation_hist"].items())
+        add(f"  participation histogram: {hist}")
+    if h.get("client_state_bytes") is not None:
+        add(f"  client-state matrix: {_fmt_bytes(h['client_state_bytes'])}")
 
     p = summary["progress"]
     if p["trajectory"]:

@@ -228,7 +228,7 @@ def test_server_replacement_resets_version_stack():
         complex=jax.tree.map(lambda x: jnp.ones_like(x), tr.server.complex),
         round=7)
     tr.server = restored                    # what train.py --resume does
-    args, (_, _, _, _, r) = eng._round_args()
+    args, (_, _, _, r) = eng._round_args()
     assert r == 7
     want = np.asarray(flatten.pack(eng.layout, restored.complex))
     for v in range(eng.n_versions):

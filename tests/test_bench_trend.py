@@ -1,0 +1,70 @@
+"""Unit tests for the bench-trend gate's compare() — in particular the
+zero-baseline byte slack, whose old ``endswith("bytes")`` match silently
+skipped ``bytes_per_round``-style metrics."""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "benchmarks"))
+
+from bench_trend import ZERO_SLACK_BYTES, compare  # noqa: E402
+
+
+def _payload(bench, rows):
+    return {"bench": bench, "rows": rows}
+
+
+def test_compare_flags_cost_regression():
+    base = _payload("client_scale", [{"label": "n1e3", "state_bytes": 1000}])
+    fresh = _payload("client_scale", [{"label": "n1e3", "state_bytes": 2000}])
+    assert compare(base, fresh, 0.10)
+    assert not compare(base, base, 0.10)
+
+
+def test_compare_flags_savings_drop_and_missing_row():
+    base = _payload("comm_savings", [
+        {"arch": "simple", "comm_dtype": "f16",
+         "bytes_per_round": 100.0, "ratio_vs_f32": 2.0},
+        {"arch": "complex", "comm_dtype": "f16",
+         "bytes_per_round": 100.0, "ratio_vs_f32": 2.0}])
+    fresh = _payload("comm_savings", [
+        {"arch": "simple", "comm_dtype": "f16",
+         "bytes_per_round": 100.0, "ratio_vs_f32": 1.0}])
+    failures = compare(base, fresh, 0.10)
+    assert any("ratio_vs_f32" in f for f in failures)
+    assert any("missing" in f for f in failures)
+
+
+def test_zero_baseline_slack_covers_infix_bytes_tokens():
+    """Token match, not suffix match: a 0 -> small-jitter move in
+    ``bytes_down_per_round`` must get the same absolute slack as
+    ``temp_bytes`` (relative tolerance on a 0 baseline is 0)."""
+    base = _payload("comm_savings", [
+        {"arch": "simple", "comm_dtype": "f16",
+         "bytes_per_round": 0.0, "bytes_down_per_round": 0.0,
+         "bytes_up_per_round": 0.0, "ratio_vs_f32": 1.0}])
+    jitter = float(ZERO_SLACK_BYTES // 2)
+    fresh = _payload("comm_savings", [
+        {"arch": "simple", "comm_dtype": "f16",
+         "bytes_per_round": jitter, "bytes_down_per_round": jitter,
+         "bytes_up_per_round": jitter, "ratio_vs_f32": 1.0}])
+    assert compare(base, fresh, 0.10) == []
+    # but a real regression still trips past the slack
+    fresh["rows"][0]["bytes_down_per_round"] = float(ZERO_SLACK_BYTES * 2)
+    failures = compare(base, fresh, 0.10)
+    assert any("bytes_down_per_round" in f for f in failures)
+
+
+def test_compare_ignores_metrics_absent_from_baseline():
+    # a baseline that predates a metric must not gate it
+    base = _payload("client_scale", [{"label": "n1e3"}])
+    fresh = _payload("client_scale", [{"label": "n1e3",
+                                       "state_bytes": 10**9}])
+    assert compare(base, fresh, 0.10) == []
+
+
+def test_compare_rejects_kind_mismatch():
+    a = _payload("client_scale", [])
+    b = _payload("comm_savings", [])
+    assert compare(a, b, 0.10)
+    assert compare(_payload("nonsense", []), _payload("nonsense", []), 0.10)

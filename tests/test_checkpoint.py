@@ -183,3 +183,90 @@ def test_checkpoints_save_at_verbatim_path(tmp_path):
     assert os.path.exists(bare_flat)
     restored = restore_server_flat(bare_flat, tr.server, tr.layout)
     assert restored.round == tr.server.round
+
+
+# ---------------------------------------------------------------------------
+# Trainer checkpoints (sampler purity + client-state matrix)
+# ---------------------------------------------------------------------------
+
+def test_trainer_resume_equals_uninterrupted(tmp_path):
+    """The resume bugfix, end to end: interrupting a run at round 2 and
+    restoring into a FRESH process must reproduce the uninterrupted run's
+    rounds 3..4 exactly — same cohort ids, same metrics, same server
+    params bit-for-bit.  (The old sequential host RNG replayed round 0's
+    cohort sequence after restore, silently changing which clients
+    trained.)"""
+    from repro.checkpoint.checkpoint import restore_trainer, save_trainer
+
+    tr_a, *_ = _tiny_trainer()
+    hist_a = [tr_a.run_round() for _ in range(4)]
+    plans_a = [tr_a.sampler.plan(r) for r in range(4)]
+
+    tr_b, *_ = _tiny_trainer()
+    hist_b = [tr_b.run_round() for _ in range(2)]
+    path = str(tmp_path / "trainer.npz")
+    save_trainer(path, tr_b)
+
+    tr_c, *_ = _tiny_trainer()
+    restore_trainer(path, tr_c)
+    assert tr_c.server.round == 2
+    # the restored sampler continues A's cohort sequence, not round 0's
+    for r in (2, 3):
+        p_c, p_a = tr_c.sampler.plan(r), plans_a[r]
+        np.testing.assert_array_equal(p_c.simple_ids, p_a.simple_ids)
+        np.testing.assert_array_equal(p_c.complex_ids, p_a.complex_ids)
+    hist_c = [tr_c.run_round() for _ in range(2)]
+    for m_a, m_c in zip(hist_a[2:], hist_c):
+        assert m_a == m_c, (m_a, m_c)
+    for a, c in zip(jax.tree.leaves(tr_a.server.complex),
+                    jax.tree.leaves(tr_c.server.complex)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
+    # participation counters resumed: 4 recorded rounds total, same as A
+    np.testing.assert_array_equal(
+        tr_c.client_state.column("participation"),
+        tr_a.client_state.column("participation"))
+
+
+def test_trainer_checkpoint_flat_format(tmp_path):
+    from repro.checkpoint.checkpoint import restore_trainer, save_trainer
+    tr, *_ = _tiny_trainer()
+    tr.run_round()
+    path = str(tmp_path / "trainer_flat.npz")
+    save_trainer(path, tr, fmt="flat")
+    tr2, *_ = _tiny_trainer()
+    restore_trainer(path, tr2, fmt="flat")
+    assert tr2.server.round == 1
+    for a, b in zip(jax.tree.leaves(tr2.server.complex),
+                    jax.tree.leaves(tr.server.complex)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(tr2.client_state.array,
+                                  tr.client_state.array)
+
+
+def test_trainer_checkpoint_rejects_sampler_mismatch(tmp_path):
+    """A checkpoint written under one sampling config must not silently
+    resume under another (different seed/mode = different cohort
+    sequence mid-run)."""
+    import dataclasses
+    from repro.checkpoint.checkpoint import restore_trainer, save_trainer
+    tr, cfg, fed, shards = _tiny_trainer()
+    path = str(tmp_path / "trainer.npz")
+    save_trainer(path, tr)
+    fed2 = dataclasses.replace(fed, seed=fed.seed + 1)
+    tr2 = FederatedTrainer(LMAdapter(cfg), fed2, shards)
+    with np.testing.assert_raises(ValueError):
+        restore_trainer(path, tr2)
+
+
+def test_restore_trainer_accepts_legacy_server_checkpoint(tmp_path):
+    """Pre-trainer checkpoints (plain save_server) restore fine: no
+    sampler meta to validate, no client-state sidecar to load."""
+    from repro.checkpoint.checkpoint import restore_trainer
+    tr, *_ = _tiny_trainer()
+    tr.run_round()
+    path = str(tmp_path / "legacy.npz")
+    save_server(path, tr.server)
+    tr2, *_ = _tiny_trainer()
+    restore_trainer(path, tr2)
+    assert tr2.server.round == 1
+    assert tr2.client_state.tracked_clients() == 0  # fresh matrix kept

@@ -165,11 +165,74 @@ def test_comm_accounting():
     assert per == expected, (per, expected)
 
 
+def _make_uniform_trainer(participation, seed=0, **fed_kw):
+    fed = FedConfig(n_devices=8, n_simple=4, participation=participation,
+                    rounds=3, local_epochs=1, lr=0.1, clip_norm=10.0,
+                    batch_size=4, algorithm="fedhen", seed=seed,
+                    sample_uniform=True, **fed_kw)
+    data = synthetic_lm(32, 16, TINY.vocab_size, seed=1)
+    shards = iid_split(data, fed.n_devices, seed=2)
+    return FederatedTrainer(LMAdapter(TINY), fed, shards)
+
+
+def test_uniform_mode_runs_and_bills_realized_cohort():
+    """Uniform super-cohort rounds: pad slots are weight-0 (they never
+    reach the loss or the aggregate) and move no bytes — only the
+    realized clients are billed."""
+    tr = _make_uniform_trainer(0.5)         # k_super = 4 over 8 clients
+    expect = 0.0
+    for r in range(2):
+        plan = tr.sampler.plan(r)
+        expect += 2.0 * (plan.n_real_simple * tr.per_simple_bytes
+                         + plan.n_real_complex * tr.per_complex_bytes)
+        m = tr.run_round()
+        assert np.isfinite(m["loss_complex"]) and np.isfinite(m["loss_simple"])
+        # every valid device is a REAL sampled client, never a pad slot
+        assert m["n_valid"] == plan.n_real_simple + plan.n_real_complex
+    assert tr.total_bytes == expect, (tr.total_bytes, expect)
+    # the matrix tracked exactly the sampled clients
+    assert tr.client_state.tracked_clients() == len(np.unique(
+        np.concatenate([tr.sampler.plan(r).real_ids() for r in range(2)])))
+
+
+def test_uniform_full_participation_matches_stratified():
+    """At participation=1.0 the uniform draw enumerates the population in
+    the stratified order, so the two modes must produce bit-identical
+    server params and metrics."""
+    fed = FedConfig(n_devices=4, n_simple=2, participation=1.0, rounds=2,
+                    local_epochs=1, lr=0.1, clip_norm=10.0, batch_size=4,
+                    algorithm="fedhen", seed=0)
+    data = synthetic_lm(32, 16, TINY.vocab_size, seed=1)
+    shards = iid_split(data, fed.n_devices, seed=2)
+    import dataclasses
+    tr_s = FederatedTrainer(LMAdapter(TINY), fed, shards)
+    tr_u = FederatedTrainer(
+        LMAdapter(TINY),
+        dataclasses.replace(fed, sample_uniform=True), shards)
+    for _ in range(2):
+        ms, mu = tr_s.run_round(), tr_u.run_round()
+        assert ms == mu, (ms, mu)
+    for a, b in zip(jax.tree.leaves(tr_s.server.complex),
+                    jax.tree.leaves(tr_u.server.complex)):
+        np.testing.assert_array_equal(a, b)
+    assert tr_s.total_bytes == tr_u.total_bytes
+
+
 def test_rounds_to_target():
     hist = [{"round": 1, "acc_simple": 0.1}, {"round": 2, "acc_simple": 0.5},
             {"round": 3, "acc_simple": 0.7}]
     assert rounds_to_target(hist, "acc_simple", 0.5) == 2
     assert rounds_to_target(hist, "acc_simple", 0.9) == -1
+
+
+def test_rounds_to_target_loss_direction():
+    """Loss-style metrics decrease toward the target: the threshold is
+    'at or UNDER', matching obs.report's direction inference."""
+    hist = [{"round": 1, "loss_simple": 2.0}, {"round": 2, "loss_simple": 0.8},
+            {"round": 3, "loss_simple": 0.3}]
+    assert rounds_to_target(hist, "loss_simple", 1.0) == 2
+    assert rounds_to_target(hist, "loss_simple", 0.3) == 3
+    assert rounds_to_target(hist, "loss_simple", 0.1) == -1
 
 
 # ---------------------------------------------------------------------------
