@@ -26,6 +26,11 @@ The bench files this repo commits are trend-gated in CI:
   per-client state-matrix footprint.  The O(cohort) flatness gate
   (sampling+state wall time within 2x from 10^3 to 10^6 clients) is that
   script's own exit code — wall-clock is never trend-gated.
+* ``BENCH_vr.json`` (benchmarks/variance_reduction.py) — rows keyed by
+  ``label`` (``none``/``scaffold``); the gated metric is the
+  deterministic control-variate store footprint.  The convergence gates
+  (rounds-to-target and final-accuracy ordering, SCAFFOLD vs plain
+  folding) are that script's own exit code.
 
 A metric regresses when the fresh value is worse than baseline by more
 than ``--tolerance`` (default 10%): "worse" is *larger* for cost metrics
@@ -71,6 +76,14 @@ GATES = {
         # state_bytes is deterministic (matrix geometry); the wall-clock
         # flatness ratio is gated by the script's own exit code, not the
         # trend diff (CI runners are noisy)
+        "metrics": {"state_bytes": "up"},
+    },
+    "variance_reduction": {
+        "key": ("label",),
+        # state_bytes is deterministic (store geometry); rounds-to-target
+        # and the final-accuracy ordering are gated by that script's own
+        # exit code — trajectories are never trend-gated (seed-sensitive
+        # across jax releases), wall-clock never either
         "metrics": {"state_bytes": "up"},
     },
 }

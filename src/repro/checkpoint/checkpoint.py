@@ -210,6 +210,8 @@ def restore_server_flat(path: str, server, layout):
 # ---------------------------------------------------------------------------
 
 _CLIENT_STATE_KEY = "__client_state__"
+_CV_STORE_KEY = "__cv_store__"
+_CV_GLOBAL_KEY = "__cv_global__"
 
 
 def save_trainer(path: str, trainer, *, fmt: str = "tree") -> None:
@@ -224,15 +226,24 @@ def save_trainer(path: str, trainer, *, fmt: str = "tree") -> None:
       can FAIL LOUDLY if the resuming config would draw different cohorts;
     * the per-client state matrix (participation counters, version tags,
       reserved columns) as a ``__client_state__`` sidecar array + its
-      column schema in meta, restored by name for schema compatibility.
+      column schema in meta, restored by name for schema compatibility;
+    * under ``variance_reduction="scaffold"``, the full control-variate
+      store (``__cv_store__``, the ``(N, n_flat)`` per-client rows) and
+      the server control variate (``__cv_global__``) — SCAFFOLD's state
+      is part of the optimizer, so a resume that dropped it would change
+      the trajectory.  Both are raw f32 in every checkpoint format.
     """
     extra_meta = {
         "sampler": trainer.sampler.state_dict(),
         "client_state_columns": list(trainer.client_state.columns),
+        "variance_reduction": trainer.fed.variance_reduction,
     }
     extra_arrays = {
         _CLIENT_STATE_KEY: np.asarray(trainer.client_state.array),
     }
+    if trainer.cv_store is not None:
+        extra_arrays[_CV_STORE_KEY] = trainer.cv_store.to_array()
+        extra_arrays[_CV_GLOBAL_KEY] = np.asarray(trainer.cv_global)
     if fmt == "flat":
         save_server_flat(path, trainer.server, trainer.layout,
                          wire=trainer.wire, extra_meta=extra_meta,
@@ -269,3 +280,14 @@ def restore_trainer(path: str, trainer, *, fmt: str = "tree") -> None:
                 data[_CLIENT_STATE_KEY],
                 meta.get("client_state_columns",
                          list(trainer.client_state.columns)))
+        if trainer.cv_store is not None:
+            if _CV_STORE_KEY in data:
+                trainer.cv_store.load(data[_CV_STORE_KEY])
+                trainer.cv_global = jnp.asarray(data[_CV_GLOBAL_KEY])
+            else:
+                raise ValueError(
+                    "trainer has variance_reduction='scaffold' but the "
+                    "checkpoint carries no __cv_store__ sidecar (saved "
+                    f"with variance_reduction="
+                    f"{meta.get('variance_reduction', 'none')!r}); "
+                    "resuming would silently reset the control variates")

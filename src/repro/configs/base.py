@@ -370,8 +370,38 @@ class FedConfig:
     async_staleness: str = "poly"
     # Exponent a of the polynomial staleness decay 1/(1+s)^a.
     async_decay: float = 0.5
+    # Variance reduction over the per-client flat state store
+    # (core/state_store.py): "scaffold" maintains a global control variate
+    # c and per-client c_i (Karimireddy et al. 2020, option II) packed
+    # through the same FlatLayout as params, corrected into every local
+    # SGD step and folded as a second flat accumulator through the masked
+    # aggregation launch.  "none" = paper protocol, bit-identical rounds.
+    variance_reduction: str = "none"
+    # Backing store for the (N_clients, n_flat) per-client vectors:
+    # "device" (jnp array), "host" (numpy), "mmap" (np.memmap tempfile for
+    # population-scale N), or "auto" (pick by footprint).
+    state_store_backend: str = "auto"
 
     def __post_init__(self):
+        self.validate()
+
+    def validate(self) -> None:
+        """Single entry point for every config-rejection rule.
+
+        Called from ``__post_init__`` (construction-time failure),
+        ``FederatedTrainer.__init__`` and ``launch/train.py`` — so a
+        config built by ``dataclasses.replace`` or deserialization hits
+        the same wall as one built by the CLI.  Raises ``ValueError``
+        with a distinct message per rule (one test each in
+        tests/test_config.py).
+        """
+        # call-time import: the config leaf module must not pull repro.core
+        # (aggregate/comm) at import — both import jax-heavy machinery and
+        # comm itself imports this module
+        from repro.core.aggregate import ALGORITHMS
+        if self.algorithm not in ALGORITHMS:
+            raise ValueError(f"unknown algorithm {self.algorithm!r} "
+                             f"(expected one of {ALGORITHMS})")
         if self.agg_engine not in ("flat", "tree"):
             raise ValueError(f"unknown agg_engine {self.agg_engine!r}")
         if self.agg_block_n <= 0 or self.agg_block_n % 128:
@@ -383,8 +413,7 @@ class FedConfig:
             raise ValueError(f"cohort_chunk must be an int or 'auto', got "
                              f"{self.cohort_chunk!r}")
         # wire validation lives with the wire (one source of truth for the
-        # dtype set + quant_block | lane-alignment rule); imported at call
-        # time so the config leaf module never loads repro.core at import
+        # dtype set + quant_block | lane-alignment rule)
         from repro.core.comm import WireSpec
         WireSpec(self.comm_dtype, self.quant_block)
         if self.comm_dtype == "int8" and self.agg_engine != "flat":
@@ -399,3 +428,13 @@ class FedConfig:
         if self.async_decay < 0:
             raise ValueError(f"async_decay must be >= 0, "
                              f"got {self.async_decay}")
+        if self.variance_reduction not in ("none", "scaffold"):
+            raise ValueError(f"variance_reduction must be 'none' or "
+                             f"'scaffold', got {self.variance_reduction!r}")
+        if self.state_store_backend not in ("auto", "device", "host", "mmap"):
+            raise ValueError(f"state_store_backend must be one of "
+                             f"auto/device/host/mmap, "
+                             f"got {self.state_store_backend!r}")
+        if self.variance_reduction == "scaffold" and self.lr <= 0:
+            raise ValueError("variance_reduction='scaffold' requires lr > 0 "
+                             "(control-variate deltas divide by K*lr)")

@@ -57,7 +57,9 @@ backend).
 
 from __future__ import annotations
 
+import dataclasses
 import functools
+import warnings
 from typing import Any, Callable, NamedTuple, Optional, Tuple
 
 import jax
@@ -69,6 +71,77 @@ from repro.kernels.masked_agg import ops as agg_ops
 Tree = Any
 
 ALGORITHMS = ("fedhen", "noside", "decouple")
+
+
+# ---------------------------------------------------------------------------
+# EngineSpec: the one object a fold engine is configured by
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class EngineSpec:
+    """Everything a fold engine needs, in one frozen value.
+
+    The engine kwargs used to thread loose through ``make_engine`` /
+    ``streaming_{init,fold,finalize}`` / ``launch/steps.py`` — seven
+    arguments per call site, drifting independently.  An ``EngineSpec``
+    is built ONCE (``from_config`` next to the ``FedConfig`` that owns
+    the knobs) and handed whole to every seam; trace-time values the
+    config cannot know (the mask tree, the trainer's layout, a
+    ``flat_mask`` that is a round *argument*) are attached with
+    :meth:`bind`.
+
+    ``eq=False``: ``mask``/``flat_mask`` may hold (traced) arrays, so
+    identity comparison is the only safe equality — specs are plumbing,
+    never dict keys.
+
+    The legacy loose-kwarg signatures still work via shims that emit
+    ``DeprecationWarning`` and build the equivalent spec, so both paths
+    run literally the same code (jaxpr-identity-tested in
+    tests/test_aggregate.py).
+    """
+
+    engine: str = "flat"
+    algorithm: str = "fedhen"
+    mask: Tree = None
+    layout: Optional[flatten.FlatLayout] = None
+    flat_mask: Optional[jax.Array] = None
+    block_n: int = 2048
+    stream_dtype: Any = jnp.float32
+    wire: Optional[comm.WireSpec] = None
+    variance_reduction: str = "none"
+
+    def __post_init__(self):
+        if self.engine not in ("flat", "tree"):
+            raise ValueError(f"unknown agg engine {self.engine!r}")
+        if self.algorithm not in ALGORITHMS:
+            raise ValueError(self.algorithm)
+        if (self.engine == "tree" and self.wire is not None
+                and self.wire.is_quantized):
+            raise ValueError("int8 wire requires the flat engine "
+                             "(dequantizing fold is a flat-buffer op)")
+
+    @classmethod
+    def from_config(cls, fed, *, mask: Tree = None,
+                    layout: Optional[flatten.FlatLayout] = None,
+                    flat_mask: Optional[jax.Array] = None,
+                    wire: Optional[comm.WireSpec] = None) -> "EngineSpec":
+        """Build the spec from a ``FedConfig`` (the knobs' one source)."""
+        return cls(engine=fed.agg_engine, algorithm=fed.algorithm,
+                   mask=mask, layout=layout, flat_mask=flat_mask,
+                   block_n=fed.agg_block_n,
+                   stream_dtype=jnp.dtype(fed.agg_stream_dtype),
+                   wire=wire, variance_reduction=fed.variance_reduction)
+
+    def bind(self, **kw) -> "EngineSpec":
+        """A copy with trace-time values attached (mask, layout,
+        flat_mask, ...)."""
+        return dataclasses.replace(self, **kw)
+
+
+def _legacy_spec(where: str, **kw) -> EngineSpec:
+    warnings.warn(f"{where} with loose engine kwargs is deprecated; "
+                  f"pass an EngineSpec", DeprecationWarning, stacklevel=3)
+    return EngineSpec(**kw)
 
 
 def _gated_wsum_leaf(x: jax.Array, weights: jax.Array) -> jax.Array:
@@ -184,11 +257,16 @@ class StreamState(NamedTuple):
     *whole-vector* ``w_out`` sums, because decouple's new complex model is
     the complex-group mean everywhere, including inside M.  ``tot_in`` /
     ``tot_out`` are the scalar weight totals the finalize divides by.
+    ``cv_acc`` (SCAFFOLD only, else ``None``) is the second flat
+    accumulator: the raw sum of per-client control-variate deltas folded
+    through the exact same masked launch as the params; the round divides
+    it by N_devices itself (``finalize`` never touches it).
     """
     acc: jax.Array
     acc_out: Optional[jax.Array]
     tot_in: jax.Array
     tot_out: jax.Array
+    cv_acc: Optional[jax.Array] = None
 
 
 def _layout_for(tree: Tree, layout, block_n: int, *, stacked: bool = False):
@@ -197,7 +275,7 @@ def _layout_for(tree: Tree, layout, block_n: int, *, stacked: bool = False):
     return flatten.layout_of(tree, total_multiple=block_n, stacked=stacked)
 
 
-def streaming_init(params_like: Tree, algorithm: str, *,
+def streaming_init(params_like: Tree, algorithm, *,
                    layout: Optional[flatten.FlatLayout] = None,
                    block_n: int = 2048) -> StreamState:
     """Zero flat accumulators for one round of streaming aggregation.
@@ -205,30 +283,34 @@ def streaming_init(params_like: Tree, algorithm: str, *,
     Args:
       params_like: ONE (unstacked) complex model tree — only shapes are
         read, to size the flat accumulator.
-      algorithm: one of :data:`ALGORITHMS` (decouple allocates the second
-        accumulator).
-      layout / block_n: must match the subsequent folds (the trainer
-        passes its one static layout everywhere).
+      algorithm: the :class:`EngineSpec` (preferred; decouple allocates
+        the second accumulator, SCAFFOLD the control-variate one), or a
+        legacy algorithm string (deprecated).
+      layout / block_n: legacy-only loose kwargs; a spec carries its own.
 
     Returns: a :class:`StreamState` of f32 zeros (``(n_flat,)`` acc(s) +
     two scalar weight totals)."""
-    if algorithm not in ALGORITHMS:
-        raise ValueError(algorithm)
-    layout = _layout_for(params_like, layout, block_n)
+    spec = algorithm if isinstance(algorithm, EngineSpec) else _legacy_spec(
+        "streaming_init(params_like, algorithm, ...)", algorithm=algorithm,
+        layout=layout, block_n=block_n)
+    layout = _layout_for(params_like, spec.layout, spec.block_n)
     zeros = jnp.zeros((layout.n_flat,), jnp.float32)
-    acc_out = zeros if algorithm == "decouple" else None
+    acc_out = zeros if spec.algorithm == "decouple" else None
+    cv_acc = (jnp.zeros((layout.n_flat,), jnp.float32)
+              if spec.variance_reduction == "scaffold" else None)
     return StreamState(zeros, acc_out, jnp.zeros((), jnp.float32),
-                       jnp.zeros((), jnp.float32))
+                       jnp.zeros((), jnp.float32), cv_acc)
 
 
 def streaming_fold(state: StreamState, chunk: Tree, is_simple: jax.Array,
-                   valid: jax.Array, mask: Tree, *, algorithm: str,
+                   valid: jax.Array, mask, *, algorithm: str = None,
                    layout: Optional[flatten.FlatLayout] = None,
                    flat_mask: Optional[jax.Array] = None,
                    block_n: int = 2048,
                    stream_dtype=jnp.float32,
                    wire: Optional[comm.WireSpec] = None,
-                   force_pallas_interpret: bool = False) -> StreamState:
+                   force_pallas_interpret: bool = False,
+                   cv_chunk: Optional[jax.Array] = None) -> StreamState:
     """Fold one stacked chunk of client models into the flat sums.
 
     Args:
@@ -239,11 +321,16 @@ def streaming_fold(state: StreamState, chunk: Tree, is_simple: jax.Array,
       valid: ``(Z,)`` bool validity, or f32 per-client weights (validity x
         staleness coefficient — the async engine's path; see the module
         weight contract).
-      mask: index-set-M mask tree (ignored when ``flat_mask`` is given on
-        the kernel path).
-      algorithm: one of :data:`ALGORITHMS`.
-      layout / flat_mask / block_n / stream_dtype / wire: the trainer's
-        static fold configuration — must match across init/fold/finalize.
+      mask: the :class:`EngineSpec` (preferred), or the legacy mask tree
+        with the engine configuration as loose kwargs (deprecated).
+      algorithm / layout / flat_mask / block_n / stream_dtype / wire:
+        legacy-only loose kwargs; a spec carries its own.
+      cv_chunk: optional ``(Z, n_flat)`` control-variate deltas (SCAFFOLD)
+        folded into ``state.cv_acc`` with the same per-client weights and
+        flat mask as the params — one extra accumulating launch, nothing
+        else changes.
+      force_pallas_interpret: run the kernel path in interpret mode
+        (tests on CPU).
 
     Returns: the updated state (same shapes; ``acc`` stays f32).
 
@@ -271,7 +358,16 @@ def streaming_fold(state: StreamState, chunk: Tree, is_simple: jax.Array,
     grouping is identical on both paths (groups never cross slots because
     ``quant_block`` divides the lane alignment).
     """
-    w_in, w_out = _chunk_weights(is_simple, valid, algorithm)
+    if isinstance(mask, EngineSpec):
+        spec = mask
+    else:
+        spec = _legacy_spec(
+            "streaming_fold(..., mask, algorithm=...)", algorithm=algorithm,
+            mask=mask, layout=layout, flat_mask=flat_mask, block_n=block_n,
+            stream_dtype=stream_dtype, wire=wire)
+    mask, layout, flat_mask = spec.mask, spec.layout, spec.flat_mask
+    block_n, stream_dtype, wire = spec.block_n, spec.stream_dtype, spec.wire
+    w_in, w_out = _chunk_weights(is_simple, valid, spec.algorithm)
     layout = _layout_for(chunk, layout, block_n, stacked=True)
     quantized = wire is not None and wire.is_quantized
     if wire is not None and not wire.is_identity and not quantized:
@@ -315,8 +411,34 @@ def streaming_fold(state: StreamState, chunk: Tree, is_simple: jax.Array,
         if acc_out is not None:
             acc_out = _fold_leaves_into_flat(acc_out, chunk, mask, layout,
                                              w_out, w_out, stream_dtype)
+    cv_acc = state.cv_acc
+    if cv_chunk is not None:
+        if cv_acc is None:
+            raise ValueError("cv_chunk passed but the stream state has no "
+                             "cv accumulator (init with a SCAFFOLD spec)")
+        if flat_mask is None:                  # CPU path never packed one
+            flat_mask = flatten.pack_mask(layout, mask)
+        cv_acc = _fold_cv(cv_acc, cv_chunk, flat_mask, w_in, w_out,
+                          block_n=block_n,
+                          force_pallas_interpret=force_pallas_interpret)
     return StreamState(acc, acc_out, state.tot_in + jnp.sum(w_in),
-                       state.tot_out + jnp.sum(w_out))
+                       state.tot_out + jnp.sum(w_out), cv_acc)
+
+
+def _fold_cv(cv_acc: jax.Array, cv_chunk: jax.Array, flat_mask: jax.Array,
+             w_in: jax.Array, w_out: jax.Array, *, block_n: int,
+             force_pallas_interpret: bool = False) -> jax.Array:
+    """Fold a ``(Z, n_flat)`` control-variate delta chunk into the running
+    cv sum — the identical masked accumulate launch the params take, so
+    SCAFFOLD rides the kernel (and its weight-0 NaN gating) for free.
+    Control variates are born flat (they ARE FlatLayout vectors), so this
+    path is shared by the flat AND tree engines."""
+    cv32 = cv_chunk.astype(jnp.float32)
+    if force_pallas_interpret or agg_ops.use_pallas():
+        return agg_ops.masked_agg_acc_pallas(
+            cv_acc, cv32, flat_mask, w_in, w_out, block_n=block_n,
+            interpret=force_pallas_interpret)
+    return agg_ops.masked_agg_acc_ref(cv_acc, cv32, flat_mask, w_in, w_out)
 
 
 def _fold_leaves_into_flat(acc: jax.Array, chunk: Tree, mask: Tree,
@@ -362,8 +484,8 @@ def _fold_leaves_into_flat_deq(acc: jax.Array, chunk: Tree, mask: Tree,
     return acc
 
 
-def streaming_finalize(state: StreamState, mask: Tree, template: Tree, *,
-                       algorithm: str,
+def streaming_finalize(state: StreamState, mask, template: Tree = None, *,
+                       algorithm: str = None,
                        layout: Optional[flatten.FlatLayout] = None,
                        flat_mask: Optional[jax.Array] = None,
                        block_n: int = 2048) -> Tuple[Tree, Optional[Tree]]:
@@ -371,17 +493,28 @@ def streaming_finalize(state: StreamState, mask: Tree, template: Tree, *,
 
     Args:
       state: the fully folded :class:`StreamState`.
-      mask: index-set-M mask tree (``flat_mask`` preferred when given).
+      mask: the :class:`EngineSpec` (preferred) or the legacy mask tree
+        (deprecated, with the engine configuration as loose kwargs).
       template: tree providing the output leaf dtypes (shapes come from
         the layout; ``ShapeDtypeStruct`` leaves are fine).
-      algorithm / layout / flat_mask / block_n: the same static fold
-        configuration used by init/fold.
+      algorithm / layout / flat_mask / block_n: legacy-only loose kwargs.
 
     Returns: ``(new_complex, new_simple_host)``; the host is ``None`` except
     for decouple (matching ``ServerState``).  A group with zero total weight
     yields zeros, like ``_norm_weights`` in the one-shot path.
+    ``state.cv_acc`` is deliberately NOT normalized here — SCAFFOLD's
+    server update divides the raw delta sum by N_devices, not by the
+    cohort weight totals (the round owns that step).
     """
-    layout = _layout_for(template, layout, block_n)
+    if isinstance(mask, EngineSpec):
+        spec = mask
+    else:
+        spec = _legacy_spec(
+            "streaming_finalize(state, mask, template, algorithm=...)",
+            algorithm=algorithm, mask=mask, layout=layout,
+            flat_mask=flat_mask, block_n=block_n)
+    mask, layout, flat_mask = spec.mask, spec.layout, spec.flat_mask
+    layout = _layout_for(template, layout, spec.block_n)
     if flat_mask is None:
         flat_mask = flatten.pack_mask(layout, mask)
     inv_in, inv_out = _safe_inv(state.tot_in), _safe_inv(state.tot_out)
@@ -389,14 +522,14 @@ def streaming_finalize(state: StreamState, mask: Tree, template: Tree, *,
         lambda a, t: a.astype(t.dtype), tree, template)
     combined_flat = state.acc * jnp.where(flat_mask, inv_in, inv_out)
     combined = cast(flatten.unpack(layout, combined_flat, cast=False))
-    if algorithm == "decouple":
+    if spec.algorithm == "decouple":
         new_complex = cast(flatten.unpack(layout, state.acc_out * inv_out,
                                           cast=False))
         return new_complex, combined
     return combined, None
 
 
-def make_engine(engine: str, *, algorithm: str, mask: Tree,
+def make_engine(engine, *, algorithm: str = None, mask: Tree = None,
                 layout: Optional[flatten.FlatLayout] = None,
                 flat_mask: Optional[jax.Array] = None,
                 block_n: int = 2048, stream_dtype=jnp.float32,
@@ -409,42 +542,43 @@ def make_engine(engine: str, *, algorithm: str, mask: Tree,
     flat/tree plumbing cannot drift between call sites:
 
     * ``init(params_like) -> state``
-    * ``fold(state, chunk, is_simple, valid) -> state``
+    * ``fold(state, chunk, is_simple, valid[, cv_chunk=...]) -> state``
     * ``finalize(state, template=...) -> (new_complex, simple_host)``
 
-    ``wire`` routes the fold through the communication path (the uploads
-    are what the server folds): bf16 wires ride the stream dtype, int8
-    wires use the dequantizing accumulate — flat engine only (the tree
-    engine predates the wire layer; FedConfig enforces the pairing).
+    Args:
+      engine: an :class:`EngineSpec` (preferred) — the loose
+        ``engine-string + kwargs`` form is deprecated and shimmed through
+        the same spec, so both build literally identical programs.
+
+    The spec's ``wire`` routes the fold through the communication path
+    (the uploads are what the server folds): bf16 wires ride the stream
+    dtype, int8 wires use the dequantizing accumulate — flat engine only
+    (the tree engine predates the wire layer; FedConfig and the spec both
+    enforce the pairing).
     """
-    if engine == "flat":
-        init = functools.partial(streaming_init, algorithm=algorithm,
-                                 layout=layout, block_n=block_n)
-        fold = functools.partial(streaming_fold, mask=mask,
-                                 algorithm=algorithm, layout=layout,
-                                 flat_mask=flat_mask, block_n=block_n,
-                                 stream_dtype=stream_dtype, wire=wire)
-        finalize = functools.partial(streaming_finalize, mask=mask,
-                                     algorithm=algorithm, layout=layout,
-                                     flat_mask=flat_mask, block_n=block_n)
-    elif engine == "tree":
-        if wire is not None and wire.is_quantized:
-            raise ValueError("int8 wire requires the flat engine "
-                             "(dequantizing fold is a flat-buffer op)")
-        if wire is not None and not wire.is_identity:
-            stream_dtype = wire.payload_dtype
-        init = functools.partial(tree_streaming_init, algorithm=algorithm)
-        fold = functools.partial(tree_streaming_fold, mask=mask,
-                                 algorithm=algorithm, block_n=block_n,
-                                 stream_dtype=stream_dtype)
-        finalize = functools.partial(tree_streaming_finalize, mask=mask,
-                                     algorithm=algorithm)
+    if isinstance(engine, EngineSpec):
+        spec = engine
     else:
-        raise ValueError(f"unknown agg engine {engine!r}")
+        spec = _legacy_spec(
+            "make_engine(engine, algorithm=..., mask=...)", engine=engine,
+            algorithm=algorithm, mask=mask, layout=layout,
+            flat_mask=flat_mask, block_n=block_n, stream_dtype=stream_dtype,
+            wire=wire)
+    if spec.engine == "tree" and spec.wire is not None \
+            and not spec.wire.is_identity:
+        spec = spec.bind(stream_dtype=spec.wire.payload_dtype)
+    if spec.engine == "flat":
+        init = functools.partial(streaming_init, algorithm=spec)
+        fold = functools.partial(streaming_fold, mask=spec)
+        finalize = functools.partial(streaming_finalize, mask=spec)
+    else:
+        init = functools.partial(tree_streaming_init, algorithm=spec)
+        fold = functools.partial(tree_streaming_fold, mask=spec)
+        finalize = functools.partial(tree_streaming_finalize, mask=spec)
     return init, fold, finalize
 
 
-def engine_attrs(engine: str, *, algorithm: str, block_n: int,
+def engine_attrs(engine, *, algorithm: str = None, block_n: int = None,
                  stream_dtype=jnp.float32,
                  wire: Optional[comm.WireSpec] = None) -> dict:
     """Static description of a configured fold engine, as plain scalars.
@@ -452,21 +586,30 @@ def engine_attrs(engine: str, *, algorithm: str, block_n: int,
     What the telemetry ``run_config`` ledger records about the
     aggregation path — computed next to :func:`make_engine`'s dispatch so
     the recorded configuration cannot drift from the one that runs.
+    Takes an :class:`EngineSpec` (preferred) or the deprecated loose
+    kwargs.
     """
-    if engine not in ("flat", "tree"):
-        raise ValueError(f"unknown agg engine {engine!r}")
+    if isinstance(engine, EngineSpec):
+        spec = engine
+    else:
+        spec = _legacy_spec(
+            "engine_attrs(engine, algorithm=..., block_n=...)",
+            engine=engine, algorithm=algorithm,
+            block_n=2048 if block_n is None else block_n)
+        spec = spec.bind(stream_dtype=stream_dtype, wire=wire)
     attrs = {
-        "agg_engine": engine,
-        "algorithm": algorithm,
-        "agg_block_n": int(block_n),
-        "agg_stream_dtype": str(jnp.dtype(stream_dtype)),
+        "agg_engine": spec.engine,
+        "algorithm": spec.algorithm,
+        "agg_block_n": int(spec.block_n),
+        "agg_stream_dtype": str(jnp.dtype(spec.stream_dtype)),
+        "variance_reduction": spec.variance_reduction,
     }
-    if wire is not None:
+    if spec.wire is not None:
         attrs.update({
-            "wire_dtype": str(wire.payload_dtype),
-            "wire_quantized": bool(wire.is_quantized),
-            "wire_quant_block": int(wire.quant_block)
-            if wire.is_quantized else 0,
+            "wire_dtype": str(spec.wire.payload_dtype),
+            "wire_quantized": bool(spec.wire.is_quantized),
+            "wire_quant_block": int(spec.wire.quant_block)
+            if spec.wire.is_quantized else 0,
         })
     return attrs
 
@@ -478,55 +621,98 @@ def engine_attrs(engine: str, *, algorithm: str, block_n: int,
 class TreeStreamState(NamedTuple):
     """Per-leaf analogue of ``StreamState``: ``acc``/``acc_out`` are f32
     *trees* shaped like one complex model (one ``masked_agg`` launch per
-    leaf at fold time)."""
+    leaf at fold time).  ``cv_acc`` stays FLAT even here — control
+    variates are FlatLayout vectors on every engine (that is the point
+    of the parity: flat-vs-tree must agree on the cv sum bit for bit)."""
     acc: Tree
     acc_out: Optional[Tree]
     tot_in: jax.Array
     tot_out: jax.Array
+    cv_acc: Optional[jax.Array] = None
 
 
-def tree_streaming_init(params_like: Tree, algorithm: str) -> TreeStreamState:
-    """Zero accumulators shaped like one (unstacked) complex model."""
-    if algorithm not in ALGORITHMS:
-        raise ValueError(algorithm)
+def tree_streaming_init(params_like: Tree, algorithm) -> TreeStreamState:
+    """Zero accumulators shaped like one (unstacked) complex model.
+    ``algorithm``: an :class:`EngineSpec` (preferred) or a legacy
+    algorithm string (deprecated)."""
+    spec = algorithm if isinstance(algorithm, EngineSpec) else _legacy_spec(
+        "tree_streaming_init(params_like, algorithm)", engine="tree",
+        algorithm=algorithm)
     zeros = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32),
                          params_like)
-    acc_out = zeros if algorithm == "decouple" else None
+    acc_out = zeros if spec.algorithm == "decouple" else None
+    cv_acc = None
+    if spec.variance_reduction == "scaffold":
+        if spec.layout is None:
+            raise ValueError("SCAFFOLD on the tree engine needs the spec's "
+                             "layout (the cv accumulator is flat)")
+        cv_acc = jnp.zeros((spec.layout.n_flat,), jnp.float32)
     return TreeStreamState(zeros, acc_out, jnp.zeros((), jnp.float32),
-                           jnp.zeros((), jnp.float32))
+                           jnp.zeros((), jnp.float32), cv_acc)
 
 
 def tree_streaming_fold(state: TreeStreamState, chunk: Tree,
-                        is_simple: jax.Array, valid: jax.Array, mask: Tree,
-                        *, algorithm: str, block_n: int = 2048,
+                        is_simple: jax.Array, valid: jax.Array, mask,
+                        *, algorithm: str = None, block_n: int = 2048,
                         stream_dtype=jnp.float32,
-                        force_pallas_interpret: bool = False
+                        force_pallas_interpret: bool = False,
+                        cv_chunk: Optional[jax.Array] = None
                         ) -> TreeStreamState:
     """Fold one stacked chunk into per-leaf sums: one ``masked_agg`` kernel
     call per leaf on TPU (the pre-flat engine, kept for parity).
 
-    ``stream_dtype`` mirrors the flat fold's streaming precision: inputs
-    are rounded to it before the f32 accumulation, so a flat-vs-tree
-    comparison at bf16 compares like with like."""
-    w_in, w_out = _chunk_weights(is_simple, valid, algorithm)
+    ``mask``: the :class:`EngineSpec` (preferred) or the legacy mask tree
+    (deprecated).  ``stream_dtype`` mirrors the flat fold's streaming
+    precision: inputs are rounded to it before the f32 accumulation, so a
+    flat-vs-tree comparison at bf16 compares like with like.  ``cv_chunk``
+    (SCAFFOLD) folds through the same flat cv path as the flat engine —
+    see :func:`_fold_cv`."""
+    if isinstance(mask, EngineSpec):
+        spec = mask
+    else:
+        spec = _legacy_spec(
+            "tree_streaming_fold(..., mask, algorithm=...)", engine="tree",
+            algorithm=algorithm, mask=mask, block_n=block_n,
+            stream_dtype=stream_dtype)
+    w_in, w_out = _chunk_weights(is_simple, valid, spec.algorithm)
     chunk32 = jax.tree.map(
-        lambda x: x.astype(stream_dtype).astype(jnp.float32), chunk)
+        lambda x: x.astype(spec.stream_dtype).astype(jnp.float32), chunk)
     part = agg_ops.masked_agg_tree(
-        chunk32, mask, w_in, w_out, block_n=block_n,
+        chunk32, spec.mask, w_in, w_out, block_n=spec.block_n,
         force_pallas_interpret=force_pallas_interpret)
     acc = jax.tree.map(jnp.add, state.acc, part)
     acc_out = state.acc_out
     if acc_out is not None:
         acc_out = jax.tree.map(
             lambda a, x: a + _gated_wsum_leaf(x, w_out), acc_out, chunk32)
+    cv_acc = state.cv_acc
+    if cv_chunk is not None:
+        if cv_acc is None:
+            raise ValueError("cv_chunk passed but the stream state has no "
+                             "cv accumulator (init with a SCAFFOLD spec)")
+        flat_mask = spec.flat_mask
+        if flat_mask is None:
+            flat_mask = flatten.pack_mask(spec.layout, spec.mask)
+        cv_acc = _fold_cv(cv_acc, cv_chunk, flat_mask, w_in, w_out,
+                          block_n=spec.block_n,
+                          force_pallas_interpret=force_pallas_interpret)
     return TreeStreamState(acc, acc_out, state.tot_in + jnp.sum(w_in),
-                           state.tot_out + jnp.sum(w_out))
+                           state.tot_out + jnp.sum(w_out), cv_acc)
 
 
-def tree_streaming_finalize(state: TreeStreamState, mask: Tree,
-                            template: Tree, *, algorithm: str
+def tree_streaming_finalize(state: TreeStreamState, mask,
+                            template: Tree = None, *, algorithm: str = None
                             ) -> Tuple[Tree, Optional[Tree]]:
-    """Normalize the per-leaf sums into server models (tree engine)."""
+    """Normalize the per-leaf sums into server models (tree engine).
+    ``mask``: the :class:`EngineSpec` (preferred) or the legacy mask
+    tree (deprecated)."""
+    if isinstance(mask, EngineSpec):
+        spec = mask
+    else:
+        spec = _legacy_spec(
+            "tree_streaming_finalize(state, mask, template, "
+            "algorithm=...)", engine="tree", algorithm=algorithm, mask=mask)
+    mask, algorithm = spec.mask, spec.algorithm
     def safe_div(tree, tot):
         inv = _safe_inv(tot)
         return jax.tree.map(lambda a: a * inv, tree)

@@ -213,27 +213,27 @@ class AsyncRoundEngine:
 
     def _make_round_fn(self):
         tr = self.trainer
-        adapter, fed, mask = tr.adapter, tr.fed, tr.mask
+        adapter, fed = tr.adapter, tr.fed
         algo = self.algo
+        scaffold_on = fed.variance_reduction == "scaffold"
+        cv_layout = self.layout if scaffold_on else None
         train_simple = federated.make_client_trainer(adapter.loss_simple,
-                                                     fed)
+                                                     fed, cv_layout=cv_layout)
         complex_loss = (adapter.loss_side if algo == "fedhen"
                         else adapter.loss_complex)
-        train_complex = federated.make_client_trainer(complex_loss, fed)
+        train_complex = federated.make_client_trainer(complex_loss, fed,
+                                                      cv_layout=cv_layout)
         layout, wire = self.layout, self.wire
-        stream_dtype = jnp.dtype(fed.agg_stream_dtype)
         k_simple, k_complex = tr.k_simple, tr.k_complex
         # finalize only reads dtypes from the template — static structs
         # keep the server tree out of the round's argument list
         template = jax.tree.map(
             lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
             tr.server.complex)
+        spec = tr.engine_spec
 
         def make_agg(flat_mask):
-            return aggregate.make_engine(
-                fed.agg_engine, algorithm=algo, mask=mask, layout=layout,
-                flat_mask=flat_mask, block_n=fed.agg_block_n,
-                stream_dtype=stream_dtype, wire=wire)
+            return aggregate.make_engine(spec.bind(flat_mask=flat_mask))
 
         def decode_versions(versions):
             """(V, n_flat) packed stack -> stacked broadcast trees, each
@@ -252,28 +252,53 @@ class AsyncRoundEngine:
 
         def round_fn(versions, versions_host, data_s, data_c,
                      rng, flat_mask, idx_s, w_s, idx_c, w_c,
-                     real_s=None, real_c=None):
+                     real_s=None, real_c=None,
+                     cv_global=None, cv_s=None, cv_c=None):
             # real_s / real_c: super-cohort slot reality masks (uniform
             # sampling mode only — absent, the traced program is exactly
-            # the pre-existing async round)
+            # the pre-existing async round).  cv_global / cv_s / cv_c:
+            # SCAFFOLD's server control variate and the cohort's gathered
+            # store rows — the "none" trace takes none of them.
             agg_init, agg_fold, agg_finalize = make_agg(flat_mask)
             rs, rc = jax.random.split(rng)
             bcasts_c = decode_versions(versions)
             bcasts_s = (decode_versions(versions_host)
                         if algo == "decouple" else bcasts_c)
+            sc_s = sc_c = None
+            if scaffold_on:
+                # the option-II delta's x is whatever broadcast the chunk
+                # trained on — under lag > 0 that is the chunk's SELECTED
+                # STALE version (packed from get_src's result inside the
+                # shared scan), so dc measures the drift actually taken
+                sc_s = federated.ScaffoldCtx(
+                    rows=cv_s, c_global=cv_global, pop_mask=flat_mask,
+                    layout=layout,
+                    inv_k_lr=1.0 / (federated.local_step_count(data_s, fed)
+                                    * fed.lr))
+                sc_c = federated.ScaffoldCtx(
+                    rows=cv_c, c_global=cv_global, pop_mask=None,
+                    layout=layout,
+                    inv_k_lr=1.0 / (federated.local_step_count(data_c, fed)
+                                    * fed.lr))
             state = agg_init(template)
-            state, loss_s, valid_s = federated.stream_population(
+            state, loss_s, valid_s, rows_s = federated.stream_population(
                 state, version_select(bcasts_s), train_simple, data_s, rs,
                 agg_fold, k=k_simple, chunk=self.chunk_s,
                 n_chunks=self.n_chunks_s, is_simple_flag=True,
                 skip_nan=fed.skip_nan_devices,
-                version_idx=idx_s, staleness_w=w_s, real_mask=real_s)
-            state, loss_c, valid_c = federated.stream_population(
+                version_idx=idx_s, staleness_w=w_s, real_mask=real_s,
+                scaffold=sc_s)
+            state, loss_c, valid_c, rows_c = federated.stream_population(
                 state, version_select(bcasts_c), train_complex, data_c, rc,
                 agg_fold, k=k_complex, chunk=self.chunk_c,
                 n_chunks=self.n_chunks_c, is_simple_flag=False,
                 skip_nan=fed.skip_nan_devices,
-                version_idx=idx_c, staleness_w=w_c, real_mask=real_c)
+                version_idx=idx_c, staleness_w=w_c, real_mask=real_c,
+                scaffold=sc_c)
+            cv_out = None
+            if scaffold_on:
+                cv_out = (cv_global + state.cv_acc / float(fed.n_devices),
+                          rows_s, rows_c)
             new_complex, new_host = agg_finalize(state, template=template)
             # publish: roll the new round model into the version stack
             new_versions = jnp.concatenate(
@@ -287,7 +312,7 @@ class AsyncRoundEngine:
             metrics = {"loss_simple": loss_s, "loss_complex": loss_c,
                        "n_valid": valid_s + valid_c}
             return (new_complex, new_host, new_versions,
-                    new_versions_host, metrics)
+                    new_versions_host, metrics, cv_out)
 
         return round_fn
 
@@ -336,10 +361,13 @@ class AsyncRoundEngine:
                 tr._gather(plan.simple_ids), tr._gather(plan.complex_ids),
                 key, tr._flat_mask_arg(), jnp.asarray(s_s, jnp.int32), w_s,
                 jnp.asarray(s_c, jnp.int32), w_c)
+        cv = tr._cv_args(plan)
         if tr.fed.sample_uniform:
             args += (jnp.asarray(plan.simple_real),
                      jnp.asarray(plan.complex_real))
-        return args, (plan, s_s, s_c, r)
+        elif cv:
+            args += (None, None)     # skip the real-mask slots positionally
+        return args + cv, (plan, s_s, s_c, r)
 
     def lower_round(self):
         """AOT-lower the async round jit with this trainer's shapes (the
@@ -375,14 +403,23 @@ class AsyncRoundEngine:
             with obs.span("sample_gather"):
                 args, (plan, s_s, s_c, r) = self._round_args()
             (new_complex, new_host, self.versions, self.versions_host,
-             metrics) = self._dispatch(*args)
+             metrics, cv_out) = self._dispatch(*args)
+            if cv_out is not None:
+                tr._apply_cv_update(plan, cv_out)
             tr.client_state.record_round(plan.real_ids(), r)
             tr.server = federated.ServerState(
                 complex=new_complex, simple_host=new_host, round=r + 1)
             self._published_server = tr.server
             down = self._bill_download(plan, s_s, s_c, r)
-            up = float(plan.n_real_simple * self._per_simple
-                       + plan.n_real_complex * self._per_complex)
+            # cv exchange: c_global is republished every round (no version
+            # to cache), c_i deltas ride the upload — both billed raw f32,
+            # the trainer's honest-accounting numbers (0 when off)
+            down += float(plan.n_real_simple * tr.per_simple_cv_bytes
+                          + plan.n_real_complex * tr.per_complex_cv_bytes)
+            up = float(plan.n_real_simple * (self._per_simple
+                                             + tr.per_simple_cv_bytes)
+                       + plan.n_real_complex * (self._per_complex
+                                                + tr.per_complex_cv_bytes))
             self.last_bytes_down, self.last_bytes_up = down, up
             tr.total_bytes_down += down
             tr.total_bytes_up += up

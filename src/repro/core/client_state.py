@@ -22,10 +22,12 @@ integer counters up to 2^53):
   downloaded (-1 = nothing cached).  Replaces the ``VersionCache`` dict
   with one vectorized tag-compare per round (:meth:`bill_downloads`),
   billing-identical to the dict (parity-tested).
-* ``ef_scale`` / ``cv_scale`` — RESERVED slots for the wire-compression
-  error-feedback residual norm and the SCAFFOLD control-variate norm
-  (ROADMAP items); zero until those land, but already checkpointed so
-  the schema is forward-compatible.
+* ``cv_scale``     — L2 norm of the client's SCAFFOLD control-variate
+  row, written on every state-store scatter
+  (:meth:`set_cv_scale`; zero when ``variance_reduction="none"``).
+* ``ef_scale``     — RESERVED slot for the wire-compression
+  error-feedback residual norm (ROADMAP item); zero until it lands,
+  but already checkpointed so the schema is forward-compatible.
 
 **The sentinel row.**  The matrix has ``N + 1`` rows; row ``N`` is a
 scratch row that ids may legally point at when a caller wants a
@@ -55,6 +57,7 @@ COLUMNS = ("participation", "last_round", "version_tag",
 _PART = COLUMNS.index("participation")
 _LAST = COLUMNS.index("last_round")
 _TAG = COLUMNS.index("version_tag")
+_CV = COLUMNS.index("cv_scale")
 
 NEVER = -1.0          # version_tag / last_round value for "no history"
 
@@ -127,6 +130,13 @@ class ClientStateMatrix:
         misses = int(ids.size - hit.sum())
         self._m[ids, _TAG] = tags
         return float(misses * nbytes), int(hit.sum()), misses
+
+    def set_cv_scale(self, ids: np.ndarray, norms: np.ndarray) -> None:
+        """Record the L2 norm of each updated SCAFFOLD control-variate
+        row (core/state_store.py scatter path) — the per-client drift
+        signal the participation telemetry reads.  O(cohort)."""
+        self._m[np.asarray(ids, dtype=np.int64), _CV] = \
+            np.asarray(norms, dtype=np.float64)
 
     def reset_version_tags(self) -> None:
         """Forget every client's cached version (checkpoint restore /

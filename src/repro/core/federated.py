@@ -76,7 +76,7 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -84,7 +84,7 @@ import numpy as np
 
 from repro.configs.base import FedConfig
 from repro.core import aggregate, client_state, comm, flatten, masking
-from repro.core import sampling
+from repro.core import sampling, state_store
 from repro.obs import telemetry as obslib
 from repro.optim.sgd import sgd_update
 
@@ -97,17 +97,28 @@ Batch = Dict[str, jax.Array]
 # ---------------------------------------------------------------------------
 
 def make_client_trainer(loss_fn: Callable[[Tree, Batch], jax.Array],
-                        fed: FedConfig):
-    """Returns train(params, data, rng) -> (params', mean_loss).
+                        fed: FedConfig, *,
+                        cv_layout: Optional[flatten.FlatLayout] = None):
+    """Returns train(params, data, rng[, corr_flat]) -> (params', mean_loss).
 
     data: dict of arrays with leading dim N_i (the client's local dataset).
     Runs E epochs of shuffled minibatch SGD with global-norm clipping.
+
+    ``cv_layout`` (SCAFFOLD): when set, ``train`` takes a fourth argument
+    — the client's packed gradient correction ``corr = c - c_i`` (already
+    masked to the population's trainable slice by the caller) — unpacked
+    through this layout once and ADDED to every minibatch gradient before
+    the clipped SGD update (Karimireddy et al. 2020 option II: the clip,
+    like the step, acts on the corrected gradient).
     """
 
-    def train(params: Tree, data: Batch, rng: jax.Array):
+    def train(params: Tree, data: Batch, rng: jax.Array,
+              corr_flat: Optional[jax.Array] = None):
         n = jax.tree.leaves(data)[0].shape[0]
         steps = max(n // fed.batch_size, 1)
         server_params = params  # the received server model (FedProx anchor)
+        corr = (flatten.unpack(cv_layout, corr_flat, cast=False)
+                if cv_layout is not None else None)
 
         def full_loss(p, batch):
             loss = loss_fn(p, batch)
@@ -127,6 +138,9 @@ def make_client_trainer(loss_fn: Callable[[Tree, Batch], jax.Array],
             def step(params, idx):
                 batch = jax.tree.map(lambda x: jnp.take(x, idx, axis=0), data)
                 loss, grads = jax.value_and_grad(full_loss)(params, batch)
+                if corr is not None:
+                    grads = jax.tree.map(
+                        lambda g, c: g + c.astype(g.dtype), grads, corr)
                 return sgd_update(params, grads, fed.lr, fed.clip_norm), loss
 
             return jax.lax.scan(step, params, idxs)
@@ -136,6 +150,33 @@ def make_client_trainer(loss_fn: Callable[[Tree, Batch], jax.Array],
         return params, jnp.mean(losses)
 
     return train
+
+
+def local_step_count(data: Batch, fed: FedConfig) -> int:
+    """Static SGD step count K one client runs on ``data`` — the divisor
+    of SCAFFOLD's option-II delta ``(x - y) / (K * lr)``.  ``data`` is
+    the STACKED population batch ``(k, N_i, ...)``; mirrors
+    ``make_client_trainer``'s ``steps * local_epochs`` exactly."""
+    n = jax.tree.leaves(data)[0].shape[1]
+    return max(n // fed.batch_size, 1) * fed.local_epochs
+
+
+class ScaffoldCtx(NamedTuple):
+    """Per-population SCAFFOLD context threaded through one chunk stream.
+
+    ``rows``: the cohort's gathered ``(k, n_flat)`` control variates
+    ``c_i`` (``FlatStateStore.gather``).  ``c_global``: the server's
+    ``(n_flat,)`` control variate ``c``.  ``pop_mask``: flat bool mask of
+    the slice this population trains (simple clients own only M — their
+    correction and delta live on M alone); ``None`` = whole vector.
+    ``layout``: the trainer's FlatLayout (packs ``x`` and ``y``).
+    ``inv_k_lr``: the static scalar ``1 / (K * lr)``.
+    """
+    rows: jax.Array
+    c_global: jax.Array
+    pop_mask: Optional[jax.Array]
+    layout: Any
+    inv_k_lr: float
 
 
 # ---------------------------------------------------------------------------
@@ -153,7 +194,7 @@ def stream_population(state, get_src, train_fn, data, key, agg_fold, *,
                       k: int, chunk: int, n_chunks: int,
                       is_simple_flag: bool, skip_nan: bool,
                       version_idx=None, staleness_w=None,
-                      real_mask=None):
+                      real_mask=None, scaffold: Optional[ScaffoldCtx] = None):
     """Scan over one population's chunks: train + fold into running sums.
 
     The ONE chunk-stream implementation — the synchronous round and the
@@ -188,12 +229,25 @@ def stream_population(state, get_src, train_fn, data, key, agg_fold, *,
         at weight 0).  ``None`` (stratified mode) keeps every slot real —
         the exact pre-existing program, traced with no mask input.  The
         mean loss normalizes by the realized client count.
+      scaffold: optional :class:`ScaffoldCtx`.  When set, each chunk (a)
+        corrects every client's local gradients by ``c - c_i`` (unpacked
+        inside the client trainer), (b) computes the option-II delta
+        ``dc = (x - y)/(K*lr) - c`` from the packed broadcast/result
+        vectors, (c) folds ``dc`` into the engine's second flat
+        accumulator with the SAME per-client weights as the params, and
+        (d) stacks the updated rows ``c_i + dc`` (invalid clients keep
+        their old row) as scan outputs.  ``None`` traces the literal
+        pre-existing program — ``variance_reduction="none"`` stays
+        bit-identical.
 
-    Returns: ``(state, mean_loss, n_valid)``.
+    Returns: ``(state, mean_loss, n_valid, cv_rows)`` — ``cv_rows`` is
+    the ``(k, n_flat)`` updated control variates (``None`` without
+    ``scaffold``; pad rows are sliced off, but the HOST still must
+    scatter only real slots — pad slots wrap real clients' ids).
     """
     k_pad = n_chunks * chunk
+    wrap = jnp.arange(k_pad) % k
     if k_pad != k:
-        wrap = jnp.arange(k_pad) % k
         data = jax.tree.map(lambda x: jnp.take(x, wrap, axis=0), data)
     keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(
         jnp.arange(k_pad))
@@ -209,35 +263,71 @@ def stream_population(state, get_src, train_fn, data, key, agg_fold, *,
     xs = (jax.tree.map(to_chunks, data), to_chunks(keys), to_chunks(real))
     if is_async:
         xs = xs + (version_idx, staleness_w)
+    if scaffold is not None:
+        rows = scaffold.rows
+        if k_pad != k:
+            rows = jnp.take(rows, wrap, axis=0)
+        xs = xs + (to_chunks(rows),)
     is_simple = jnp.full((chunk,), is_simple_flag)
 
     def tile(tree):
         return jax.tree.map(
             lambda x: jnp.broadcast_to(x[None], (chunk,) + x.shape), tree)
 
+    def _mask_pop(v):
+        """Zero a (Z, n_flat) cv vector outside the population's slice."""
+        if scaffold.pop_mask is None:
+            return v
+        return jnp.where(scaffold.pop_mask[None], v, 0.0)
+
     def fold_chunk(carry, xs):
         state, loss_sum, valid_sum = carry
         if is_async:
-            data_i, keys_i, real_i, idx_i, w_i = xs
+            data_i, keys_i, real_i, idx_i, w_i = xs[:5]
         else:
-            data_i, keys_i, real_i = xs
+            data_i, keys_i, real_i = xs[:3]
             idx_i = None
-        trained, losses = jax.vmap(train_fn)(
-            tile(get_src(idx_i)), data_i, keys_i)
+        src = get_src(idx_i)
+        if scaffold is None:
+            trained, losses = jax.vmap(train_fn)(
+                tile(src), data_i, keys_i)
+        else:
+            cv_i = xs[-1]
+            corr = _mask_pop(scaffold.c_global[None] - cv_i)
+            trained, losses = jax.vmap(train_fn)(
+                tile(src), data_i, keys_i, corr)
         valid = real_i
         if skip_nan:
             valid = valid & jax.vmap(masking.tree_isfinite)(trained)
         fold_valid = (valid.astype(jnp.float32) * w_i if is_async
                       else valid)
-        state = agg_fold(state, trained, is_simple, fold_valid)
+        if scaffold is None:
+            state = agg_fold(state, trained, is_simple, fold_valid)
+            rows_out = None
+        else:
+            # option II: dc = (x - y)/(K*lr) - c on the trained slice;
+            # x is the decoded broadcast this chunk trained on (async:
+            # its selected stale version), y the trained result
+            x_flat = flatten.pack(scaffold.layout, src)
+            y_flat = flatten.pack_stacked(scaffold.layout, trained)
+            dc = _mask_pop((x_flat[None] - y_flat) * scaffold.inv_k_lr
+                           - scaffold.c_global[None])
+            state = agg_fold(state, trained, is_simple, fold_valid,
+                             cv_chunk=dc)
+            # NaN clients fold at weight 0 (dc gated in the kernel) AND
+            # keep their previous row — a NaN row must never persist
+            rows_out = jnp.where(valid[:, None], cv_i + dc, cv_i)
         loss_sum = loss_sum + jnp.sum(jnp.where(real_i, losses, 0.0))
         valid_sum = valid_sum + jnp.sum(valid)
-        return (state, loss_sum, valid_sum), None
+        return (state, loss_sum, valid_sum), rows_out
 
     zero = jnp.zeros((), jnp.float32)
-    (state, loss_sum, valid_sum), _ = jax.lax.scan(
+    (state, loss_sum, valid_sum), ys = jax.lax.scan(
         fold_chunk, (state, zero, zero), xs)
-    return state, loss_sum / denom, valid_sum
+    cv_rows = None
+    if scaffold is not None:
+        cv_rows = ys.reshape(k_pad, -1)[:k]
+    return state, loss_sum / denom, valid_sum, cv_rows
 
 
 # ---------------------------------------------------------------------------
@@ -351,8 +441,7 @@ class FederatedTrainer:
                  client_data: List[Batch], *,
                  rng: Optional[jax.Array] = None,
                  telemetry: Optional[obslib.Telemetry] = None):
-        if fed.algorithm not in aggregate.ALGORITHMS:
-            raise ValueError(fed.algorithm)
+        fed.validate()   # every config-rejection rule, one entry point
         self.adapter = adapter
         self.fed = fed
         # observability (repro/obs): None -> the disabled NOOP singleton,
@@ -390,6 +479,21 @@ class FederatedTrainer:
         # decoded from it on clients, uploads are folded through it, and
         # the byte accounting below measures its real encoded sizes
         self.wire = comm.WireSpec(fed.comm_dtype, fed.quant_block)
+        # THE engine configuration: one frozen spec built from the config,
+        # bound with the trace-time flat_mask inside the round fn
+        self.engine_spec = aggregate.EngineSpec.from_config(
+            fed, mask=self.mask, layout=self.layout, wire=self.wire)
+        # SCAFFOLD state (tentpole consumer of core/state_store.py):
+        # per-client control variates c_i as one (N, n_flat) store row
+        # each, plus the server's c — both zero-initialized (round 1 is
+        # then bit-identical to variance_reduction="none", test-enforced)
+        self.cv_store: Optional[state_store.FlatStateStore] = None
+        self.cv_global: Optional[jax.Array] = None
+        if fed.variance_reduction == "scaffold":
+            self.cv_store = state_store.FlatStateStore(
+                fed.n_devices, self.layout.n_flat,
+                backend=fed.state_store_backend)
+            self.cv_global = jnp.zeros((self.layout.n_flat,), jnp.float32)
         self.cohort_chunk = self._resolve_cohort_chunk()
         (self.bytes_down_per_round,
          self.bytes_up_per_round) = self._measured_comm_bytes()
@@ -459,13 +563,25 @@ class FederatedTrainer:
         client's one-way wire cost per population — the single source the
         async engine's version-aware billing reuses, so the two
         accountings cannot desynchronize.
+
+        SCAFFOLD adds a control-variate exchange each way (``c`` down,
+        ``dc`` up) of the client's trained element count, billed at f32
+        (``per_simple_cv_bytes`` / ``per_complex_cv_bytes``): the cv
+        vectors move raw, not through the wire encoder — honest
+        accounting, and the measured cost of turning the knob on.
         """
         n_m = int(np.sum(np.asarray(self.flat_mask)))   # |M| true elements
         self.per_complex_bytes = comm.wire_bytes(self.wire,
                                                  self.layout.n_params)
         self.per_simple_bytes = comm.wire_bytes(self.wire, n_m)
-        one_way = float(self.k_simple * self.per_simple_bytes
-                        + self.k_complex * self.per_complex_bytes)
+        cv = self.cv_store is not None
+        self.per_simple_cv_bytes = 4.0 * n_m if cv else 0.0
+        self.per_complex_cv_bytes = 4.0 * self.layout.n_params if cv else 0.0
+        one_way = float(
+            self.k_simple * (self.per_simple_bytes
+                             + self.per_simple_cv_bytes)
+            + self.k_complex * (self.per_complex_bytes
+                                + self.per_complex_cv_bytes))
         return one_way, one_way
 
     def _round_bytes(self, plan: sampling.CohortPlan) -> Tuple[float, float]:
@@ -475,8 +591,11 @@ class FederatedTrainer:
         only the realized clients — a pad slot moves no bytes."""
         if plan.all_real:
             return self.bytes_down_per_round, self.bytes_up_per_round
-        one_way = float(plan.n_real_simple * self.per_simple_bytes
-                        + plan.n_real_complex * self.per_complex_bytes)
+        one_way = float(
+            plan.n_real_simple * (self.per_simple_bytes
+                                  + self.per_simple_cv_bytes)
+            + plan.n_real_complex * (self.per_complex_bytes
+                                     + self.per_complex_cv_bytes))
         return one_way, one_way
 
     def analytic_bytes_per_round(self) -> float:
@@ -522,10 +641,12 @@ class FederatedTrainer:
             "bytes_down_per_round": self.bytes_down_per_round,
             "bytes_up_per_round": self.bytes_up_per_round,
         }
-        values.update(aggregate.engine_attrs(
-            fed.agg_engine, algorithm=fed.algorithm,
-            block_n=fed.agg_block_n, stream_dtype=fed.agg_stream_dtype,
-            wire=self.wire))
+        if self.cv_store is not None:
+            values.update({
+                "state_store_backend": self.cv_store.backend,
+                "state_store_bytes": self.cv_store.nbytes,
+            })
+        values.update(aggregate.engine_attrs(self.engine_spec))
         self.obs.ledger("run_config", values)
 
     def _emit_round_health(self, metrics: Dict[str, float], *,
@@ -565,6 +686,12 @@ class FederatedTrainer:
             "state_bytes": self.client_state.nbytes,
             "tracked_clients": self.client_state.tracked_clients(),
         })
+        if self.cv_store is not None:
+            obs.ledger("state_store", {
+                "store_bytes": self.cv_store.nbytes,
+                "cum_gathered_bytes": self.cv_store.gathered_bytes,
+                "cum_scattered_bytes": self.cv_store.scattered_bytes,
+            })
         obs.ledger("participation_hist",
                    self.client_state.participation_histogram())
 
@@ -573,24 +700,25 @@ class FederatedTrainer:
     def _make_round_fn(self):
         adapter, fed, mask = self.adapter, self.fed, self.mask
         algo = fed.algorithm
-        train_simple = make_client_trainer(adapter.loss_simple, fed)
+        scaffold_on = fed.variance_reduction == "scaffold"
+        cv_layout = self.layout if scaffold_on else None
+        train_simple = make_client_trainer(adapter.loss_simple, fed,
+                                           cv_layout=cv_layout)
         complex_loss = (adapter.loss_side if algo == "fedhen"
                         else adapter.loss_complex)
-        train_complex = make_client_trainer(complex_loss, fed)
+        train_complex = make_client_trainer(complex_loss, fed,
+                                            cv_layout=cv_layout)
 
         layout = self.layout
-        stream_dtype = jnp.dtype(fed.agg_stream_dtype)
         wire = self.wire
+        spec = self.engine_spec
 
         def make_agg(flat_mask):
             """Engine dispatch.  ``flat_mask`` is a round *argument* (not a
             closed-over constant) so the precomputed bitvector lives in
             argument memory, shared across rounds, instead of being baked
             into the executable's temp allocation."""
-            return aggregate.make_engine(
-                fed.agg_engine, algorithm=algo, mask=mask, layout=layout,
-                flat_mask=flat_mask, block_n=fed.agg_block_n,
-                stream_dtype=stream_dtype, wire=wire)
+            return aggregate.make_engine(spec.bind(flat_mask=flat_mask))
 
         chunk_s, n_chunks_s = chunk_geometry(self.k_simple,
                                              self.cohort_chunk)
@@ -601,10 +729,16 @@ class FederatedTrainer:
                      data_s: Batch, data_c: Batch, rng: jax.Array,
                      flat_mask: Optional[jax.Array],
                      real_s: Optional[jax.Array] = None,
-                     real_c: Optional[jax.Array] = None):
+                     real_c: Optional[jax.Array] = None,
+                     cv_global: Optional[jax.Array] = None,
+                     cv_s: Optional[jax.Array] = None,
+                     cv_c: Optional[jax.Array] = None):
             # real_s / real_c: per-slot reality masks (uniform
             # super-cohort mode only — stratified rounds never pass them,
-            # keeping the traced program literally the pre-existing one)
+            # keeping the traced program literally the pre-existing one).
+            # cv_global / cv_s / cv_c: SCAFFOLD's server control variate
+            # and the cohort's gathered store rows (scaffold only — the
+            # "none" trace takes none of them and stays bit-identical).
             agg_init, agg_fold, agg_finalize = make_agg(flat_mask)
             rs, rc = jax.random.split(rng)
             # the server -> client broadcast crosses the wire: clients
@@ -615,23 +749,49 @@ class FederatedTrainer:
             src_simple = (comm.broadcast_roundtrip(wire, layout,
                                                    simple_host)
                           if algo == "decouple" else bc_complex)
+            sc_s = sc_c = None
+            if scaffold_on:
+                # simple clients train (and correct) only the M slice:
+                # their c_i lives on M alone.  flat_mask is a round arg
+                # whenever scaffold is on (_flat_mask_arg).
+                sc_s = ScaffoldCtx(
+                    rows=cv_s, c_global=cv_global, pop_mask=flat_mask,
+                    layout=layout,
+                    inv_k_lr=1.0 / (local_step_count(data_s, fed)
+                                    * fed.lr))
+                sc_c = ScaffoldCtx(
+                    rows=cv_c, c_global=cv_global, pop_mask=None,
+                    layout=layout,
+                    inv_k_lr=1.0 / (local_step_count(data_c, fed)
+                                    * fed.lr))
             state = agg_init(complex_params)
-            state, loss_s, valid_s = stream_population(
+            state, loss_s, valid_s, rows_s = stream_population(
                 state, lambda _: src_simple, train_simple, data_s, rs,
                 agg_fold, k=self.k_simple, chunk=chunk_s,
                 n_chunks=n_chunks_s, is_simple_flag=True,
-                skip_nan=fed.skip_nan_devices, real_mask=real_s)
-            state, loss_c, valid_c = stream_population(
+                skip_nan=fed.skip_nan_devices, real_mask=real_s,
+                scaffold=sc_s)
+            state, loss_c, valid_c, rows_c = stream_population(
                 state, lambda _: bc_complex, train_complex, data_c, rc,
                 agg_fold, k=self.k_complex, chunk=chunk_c,
                 n_chunks=n_chunks_c, is_simple_flag=False,
-                skip_nan=fed.skip_nan_devices, real_mask=real_c)
+                skip_nan=fed.skip_nan_devices, real_mask=real_c,
+                scaffold=sc_c)
+            cv_out = None
+            if scaffold_on:
+                # server control variate: c += (1/N) * sum_i dc_i — the
+                # RAW second accumulator (group weighting already rode
+                # w_in/w_out through the fold), over ALL N devices
+                # (non-participants contribute 0), per Karimireddy eq. 5
+                new_cv_global = (cv_global
+                                 + state.cv_acc / float(fed.n_devices))
+                cv_out = (new_cv_global, rows_s, rows_c)
             new_complex, new_simple_host = agg_finalize(
                 state, template=complex_params)
             metrics = {"loss_simple": loss_s,
                        "loss_complex": loss_c,
                        "n_valid": valid_s + valid_c}
-            return new_complex, new_simple_host, metrics
+            return new_complex, new_simple_host, metrics, cv_out
 
         return round_fn
 
@@ -658,8 +818,55 @@ class FederatedTrainer:
     def _flat_mask_arg(self) -> Optional[jax.Array]:
         """The precomputed flat bitvector, passed into the round jit as an
         argument (a resident buffer shared by every round) rather than
-        closed over as an executable constant."""
-        return self.flat_mask if self.fed.agg_engine == "flat" else None
+        closed over as an executable constant.  SCAFFOLD needs it on every
+        engine (the cv fold and the simple population's slice mask are
+        flat ops even under the tree engine)."""
+        if self.fed.agg_engine == "flat" or self.cv_store is not None:
+            return self.flat_mask
+        return None
+
+    def _cv_args(self, plan: sampling.CohortPlan) -> tuple:
+        """The SCAFFOLD round arguments: ``(c_global, rows_s, rows_c)``
+        gathered O(cohort) from the state store — empty when off (the
+        traced round then literally has no cv inputs)."""
+        if self.cv_store is None:
+            return ()
+        return (self.cv_global,
+                self.cv_store.gather(plan.simple_ids),
+                self.cv_store.gather(plan.complex_ids))
+
+    def _round_args(self, plan: sampling.CohortPlan, data_s: Batch,
+                    data_c: Batch, key: jax.Array) -> tuple:
+        args = (self.server.complex, self.server.simple_host, data_s,
+                data_c, key, self._flat_mask_arg())
+        cv = self._cv_args(plan)
+        if self.fed.sample_uniform:
+            args += (jnp.asarray(plan.simple_real),
+                     jnp.asarray(plan.complex_real))
+        elif cv:
+            args += (None, None)     # skip the real-mask slots positionally
+        return args + cv
+
+    def _apply_cv_update(self, plan: sampling.CohortPlan, cv_out) -> None:
+        """Commit one round's SCAFFOLD outputs: the new server control
+        variate, and the updated rows scattered back for REAL slots only
+        (pad slots wrap real clients' ids — writing them would clobber
+        rows the wrapped client just updated at full weight).  Also tracks
+        each updated row's norm in the scalar matrix's ``cv_scale``
+        column (telemetry: control-variate drift over rounds)."""
+        new_cv_global, rows_s, rows_c = cv_out
+        self.cv_global = new_cv_global
+        for ids, real, rows in (
+                (plan.simple_ids, plan.simple_real, rows_s),
+                (plan.complex_ids, plan.complex_real, rows_c)):
+            real = np.asarray(real, bool)
+            if not real.any():
+                continue
+            ids = np.asarray(ids, np.int64)[real]
+            rows = np.asarray(rows)[real]
+            self.cv_store.scatter(ids, rows)
+            self.client_state.set_cv_scale(
+                ids, np.linalg.norm(rows.astype(np.float64), axis=1))
 
     def lower_round(self):
         """AOT-lower the jitted round with this trainer's shapes.
@@ -672,12 +879,8 @@ class FederatedTrainer:
             return self.async_engine.lower_round()
         plan = self._sample_plan()
         key = jax.random.PRNGKey(self.fed.seed * 100003 + self.server.round)
-        args = (self.server.complex, self.server.simple_host,
-                self._gather(plan.simple_ids), self._gather(plan.complex_ids),
-                key, self._flat_mask_arg())
-        if self.fed.sample_uniform:
-            args += (jnp.asarray(plan.simple_real),
-                     jnp.asarray(plan.complex_real))
+        args = self._round_args(plan, self._gather(plan.simple_ids),
+                                self._gather(plan.complex_ids), key)
         return self._round_fn.lower(*args)
 
     def run_round(self) -> Dict[str, float]:
@@ -692,12 +895,11 @@ class FederatedTrainer:
                 data_c = self._gather(plan.complex_ids)
             key = jax.random.PRNGKey(
                 self.fed.seed * 100003 + self.server.round)
-            args = (self.server.complex, self.server.simple_host, data_s,
-                    data_c, key, self._flat_mask_arg())
-            if self.fed.sample_uniform:
-                args += (jnp.asarray(plan.simple_real),
-                         jnp.asarray(plan.complex_real))
-            new_complex, new_simple_host, metrics = self._dispatch(*args)
+            args = self._round_args(plan, data_s, data_c, key)
+            (new_complex, new_simple_host, metrics,
+             cv_out) = self._dispatch(*args)
+            if cv_out is not None:
+                self._apply_cv_update(plan, cv_out)
             self.client_state.record_round(plan.real_ids(),
                                            plan.round_index)
             self.server = ServerState(complex=new_complex,

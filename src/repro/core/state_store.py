@@ -1,0 +1,172 @@
+"""Per-client flat-vector state store: ``(N_clients, n_flat)`` rows.
+
+``ClientStateMatrix`` (client_state.py) holds per-client *scalars*; this
+module holds per-client *vectors* — one packed ``FlatLayout`` row per
+client, the shape SCAFFOLD control variates, error-feedback residuals
+and per-client momenta all share.  The contract mirrors the scalar
+matrix's round-jit seam exactly:
+
+* ``gather(ids)`` hands the round jit the O(cohort) ``(k, n_flat)``
+  block of sampled rows (a device array, ready to chunk through the
+  ``lax.scan`` stream alongside the cohort data);
+* the round returns updated rows, ``scatter(ids, rows)`` writes them
+  back.
+
+Per-round cost is O(cohort x n_flat) regardless of the population size
+— the O(cohort) host-cost guarantee ``benchmarks/client_scale.py``
+gates extends to the vector store (``benchmarks/variance_reduction.py``
+records the footprint + gather/scatter overhead).
+
+**Backends** (``FedConfig.state_store_backend``):
+
+* ``"device"`` — one jnp array; gather/scatter are jnp takes/scatters.
+  Right for small N where the whole store fits comfortably in device
+  memory next to the model.
+* ``"host"``   — one numpy array; gather is fancy indexing + a device
+  put of the O(cohort) block, scatter a fancy-indexed write.  Device
+  memory stays O(cohort).
+* ``"mmap"``   — ``np.memmap`` over an unlinked tempfile: host RSS
+  stays O(touched pages), the population-scale answer (10^6 clients x
+  1 MB rows = 1 TB never materializes).
+* ``"auto"``   — ``device`` when the footprint is under
+  ``DEVICE_LIMIT_BYTES``, ``host`` under ``HOST_LIMIT_BYTES``, else
+  ``mmap``.
+
+Pad slots: cohort plans may pad slot blocks with *wrapped real ids* at
+weight 0 — callers must mask those out before ``scatter`` (write only
+``plan.*_real`` slots) or a pad slot would clobber the real client's
+row it wraps.  ``FederatedTrainer._apply_cv_update`` does exactly this.
+"""
+
+from __future__ import annotations
+
+import os
+import tempfile
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+BACKENDS = ("auto", "device", "host", "mmap")
+
+# auto thresholds: keep the store off-device once it rivals a model's
+# footprint, and out of host RAM once it rivals the machine's
+DEVICE_LIMIT_BYTES = 64 * 1024 * 1024
+HOST_LIMIT_BYTES = 4 * 1024 * 1024 * 1024
+
+
+def resolve_backend(backend: str, nbytes: int) -> str:
+    """Map ``"auto"`` to a concrete backend by store footprint."""
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown state-store backend {backend!r} "
+                         f"(expected one of {BACKENDS})")
+    if backend != "auto":
+        return backend
+    if nbytes <= DEVICE_LIMIT_BYTES:
+        return "device"
+    if nbytes <= HOST_LIMIT_BYTES:
+        return "host"
+    return "mmap"
+
+
+class FlatStateStore:
+    """``(N_clients, n_flat)`` float32 rows with a gather/scatter seam.
+
+    ``gather`` always returns a ``jax.Array`` — the round jit's input —
+    and ``scatter`` always accepts host or device rows.  Cumulative
+    ``gathered_bytes`` / ``scattered_bytes`` counters feed the
+    ``state_store`` telemetry ledger.
+    """
+
+    def __init__(self, n_clients: int, n_flat: int, *,
+                 backend: str = "auto", dtype=np.float32):
+        if n_clients <= 0:
+            raise ValueError(f"n_clients must be > 0, got {n_clients}")
+        if n_flat <= 0:
+            raise ValueError(f"n_flat must be > 0, got {n_flat}")
+        self.n_clients = int(n_clients)
+        self.n_flat = int(n_flat)
+        self.dtype = np.dtype(dtype)
+        nbytes = self.n_clients * self.n_flat * self.dtype.itemsize
+        self.backend = resolve_backend(backend, nbytes)
+        self.gathered_bytes = 0
+        self.scattered_bytes = 0
+        self._mmap_path: Optional[str] = None
+        shape = (self.n_clients, self.n_flat)
+        if self.backend == "device":
+            self._rows = jnp.zeros(shape, self.dtype)
+        elif self.backend == "host":
+            self._rows = np.zeros(shape, self.dtype)
+        else:
+            fd, path = tempfile.mkstemp(prefix="flat_state_", suffix=".bin")
+            os.close(fd)
+            self._mmap_path = path
+            self._rows = np.memmap(path, dtype=self.dtype, mode="w+",
+                                   shape=shape)
+
+    # -- geometry -------------------------------------------------------------
+
+    @property
+    def nbytes(self) -> int:
+        """Logical footprint (mmap: file size, not resident pages)."""
+        return self.n_clients * self.n_flat * self.dtype.itemsize
+
+    # -- round-jit seam (O(cohort) per call) ----------------------------------
+
+    def gather(self, ids) -> jax.Array:
+        """The sampled rows ``(k, n_flat)`` as a device array."""
+        ids = np.asarray(ids, dtype=np.int64)
+        self.gathered_bytes += int(ids.size) * self.n_flat * \
+            self.dtype.itemsize
+        if self.backend == "device":
+            return jnp.take(self._rows, jnp.asarray(ids), axis=0)
+        return jnp.asarray(self._rows[ids])
+
+    def scatter(self, ids, rows) -> None:
+        """Write updated rows back (unique REAL ids only — callers mask
+        out weight-0 pad slots, which wrap real ids by construction)."""
+        ids = np.asarray(ids, dtype=np.int64)
+        self.scattered_bytes += int(ids.size) * self.n_flat * \
+            self.dtype.itemsize
+        if self.backend == "device":
+            self._rows = self._rows.at[jnp.asarray(ids)].set(
+                jnp.asarray(rows, self.dtype))
+        else:
+            self._rows[ids] = np.asarray(rows, self.dtype)
+
+    # -- checkpoint integration ----------------------------------------------
+
+    def to_array(self) -> np.ndarray:
+        """The full store as a host array (checkpoint payload)."""
+        return np.asarray(self._rows)
+
+    def load(self, array: np.ndarray) -> None:
+        """Restore from a checkpointed payload (shape-checked)."""
+        array = np.asarray(array, dtype=self.dtype)
+        if array.shape != (self.n_clients, self.n_flat):
+            raise ValueError(
+                f"state-store shape mismatch: checkpoint "
+                f"{array.shape}, store {(self.n_clients, self.n_flat)}")
+        if self.backend == "device":
+            self._rows = jnp.asarray(array)
+        else:
+            self._rows[...] = array
+
+    # -- lifecycle ------------------------------------------------------------
+
+    def close(self) -> None:
+        """Drop the mmap backing file (no-op on other backends)."""
+        if self._mmap_path is not None:
+            self._rows = np.zeros((0, self.n_flat), self.dtype)
+            try:
+                os.unlink(self._mmap_path)
+            except OSError:
+                pass
+            self._mmap_path = None
+
+    def __del__(self):  # pragma: no cover - GC timing
+        try:
+            self.close()
+        except Exception:
+            pass

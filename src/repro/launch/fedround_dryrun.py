@@ -46,9 +46,13 @@ AGG_BLOCK_N = 2048
 def make_round_step(cfg, policy, *, local_steps: int, lr=0.1, clip=10.0,
                     cohort_chunk: int = 0, agg_block_n: int = AGG_BLOCK_N):
     """The streamed FedHeN round step (see ``steps.make_fed_round_step``)."""
-    return make_fed_round_step(cfg, policy, local_steps=local_steps, lr=lr,
-                               clip_norm=clip, cohort_chunk=cohort_chunk,
-                               agg_block_n=agg_block_n)
+    from repro.core import aggregate, comm
+    return make_fed_round_step(
+        cfg, policy, local_steps=local_steps, lr=lr,
+        clip_norm=clip, cohort_chunk=cohort_chunk,
+        engine=aggregate.EngineSpec(algorithm="fedhen",
+                                    block_n=agg_block_n,
+                                    wire=comm.WireSpec("float32", 128)))
 
 
 def main():

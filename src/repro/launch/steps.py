@@ -18,6 +18,7 @@
 from __future__ import annotations
 
 import functools
+import warnings
 from typing import Any, Dict, Optional
 
 import jax
@@ -51,11 +52,14 @@ def make_train_step(cfg: ModelConfig, policy: Policy = NO_POLICY, *,
 def make_fed_round_step(cfg: ModelConfig, policy: Policy = NO_POLICY, *,
                         local_steps: int, lr: float = 0.1,
                         clip_norm: float = 10.0, cohort_chunk: int = 0,
-                        agg_engine: str = "flat", agg_block_n: int = 2048,
-                        comm_dtype: str = "float32", quant_block: int = 128,
+                        engine: Optional[aggregate.EngineSpec] = None,
                         staleness_scheme: str = "poly",
                         staleness_decay: float = 0.5,
-                        telemetry: Optional[obslib.Telemetry] = None):
+                        telemetry: Optional[obslib.Telemetry] = None,
+                        agg_engine: Optional[str] = None,
+                        agg_block_n: Optional[int] = None,
+                        comm_dtype: Optional[str] = None,
+                        quant_block: Optional[int] = None):
     """One FedHeN round over a stacked cohort, streaming in chunks.
 
     Returns ``round_step(cohort, data, is_simple, flat_mask=None,
@@ -66,21 +70,28 @@ def make_fed_round_step(cfg: ModelConfig, policy: Policy = NO_POLICY, *,
     by chunk, folding each trained chunk into running masked sums — the
     launch-side mirror of core/federated.py's round, operating on an
     externally sharded cohort instead of tiling server params.
-    ``agg_engine="flat"`` (default) packs each trained chunk through the
-    static ``core.flatten`` layout and folds the whole model with one
-    accumulating ``masked_agg`` launch per chunk (``agg_block_n`` tiles);
-    ``"tree"`` keeps the per-leaf parity fold.  Pass the precomputed flat
-    bitvector (``flatten.pack_mask`` over the same layout) as ``flat_mask``
-    so it enters the jit as a replicated argument; if left ``None`` it is
-    derived inside the trace, which XLA constant-folds into a params-sized
-    ``pred`` literal baked into the executable (measured on the reduced
-    config) — fine for tests, wrong at production scale.  The dry-run
-    passes it explicitly.
+    ``engine`` is an :class:`repro.core.aggregate.EngineSpec` carrying
+    the whole aggregation configuration — engine kind (``"flat"`` packs
+    each trained chunk through the static ``core.flatten`` layout and
+    folds the whole model with one accumulating ``masked_agg`` launch per
+    chunk, ``block_n`` tiles; ``"tree"`` keeps the per-leaf parity fold),
+    the upload wire (``spec.wire``, core/comm.py: the externally sharded
+    cohort arrives already broadcast, so only the client->server
+    direction crosses this step — the fold consumes the encoded uploads,
+    int8 via the dequantizing masked_agg accumulate), and the stream
+    dtype.  The spec's mask/layout/flat_mask fields are bound HERE at
+    trace time (they depend on the cohort template), so pass a spec
+    without them — ``EngineSpec(engine="tree", wire=...)`` — or ``None``
+    for the all-defaults flat/f32 engine.  The legacy loose kwargs
+    (``agg_engine``/``agg_block_n``/``comm_dtype``/``quant_block``) still
+    work but warn: they are folded into an equivalent spec.
 
-    ``comm_dtype`` selects the upload wire (core/comm.py): the externally
-    sharded cohort arrives already broadcast, so only the client->server
-    direction crosses this step — the fold consumes the encoded uploads
-    (int8 via the dequantizing masked_agg accumulate).
+    Pass the precomputed flat bitvector (``flatten.pack_mask`` over the
+    same layout) as ``flat_mask`` so it enters the jit as a replicated
+    argument; if left ``None`` it is derived inside the trace, which XLA
+    constant-folds into a params-sized ``pred`` literal baked into the
+    executable (measured on the reduced config) — fine for tests, wrong
+    at production scale.  The dry-run passes it explicitly.
 
     ``staleness`` is the async driver's seam (core/async_rounds.py owns
     the versioning; a sharded launch driver passes the result here): a
@@ -107,7 +118,28 @@ def make_fed_round_step(cfg: ModelConfig, policy: Policy = NO_POLICY, *,
     loop, not inside the traced function.
     """
     adapter = LMAdapter(cfg, policy=policy, remat=True)
-    wire = comm.WireSpec(comm_dtype, quant_block)
+    legacy = {"agg_engine": agg_engine, "agg_block_n": agg_block_n,
+              "comm_dtype": comm_dtype, "quant_block": quant_block}
+    if any(v is not None for v in legacy.values()):
+        if engine is not None:
+            raise ValueError(
+                "pass either engine= (an EngineSpec) or the legacy "
+                f"agg kwargs, not both (got both engine and "
+                f"{[k for k, v in legacy.items() if v is not None]})")
+        warnings.warn(
+            "make_fed_round_step(agg_engine=..., comm_dtype=...) loose "
+            "kwargs are deprecated; pass engine=EngineSpec(...)",
+            DeprecationWarning, stacklevel=2)
+        engine = aggregate.EngineSpec(
+            engine=agg_engine or "flat", algorithm="fedhen",
+            block_n=2048 if agg_block_n is None else agg_block_n,
+            wire=comm.WireSpec(comm_dtype or "float32",
+                               128 if quant_block is None else quant_block))
+    spec = engine if engine is not None else aggregate.EngineSpec(
+        algorithm="fedhen", wire=comm.WireSpec("float32", 128))
+    if spec.wire is None:
+        spec = spec.bind(wire=comm.WireSpec("float32", 128))
+    wire = spec.wire
     obs = obslib.coalesce(telemetry)
     if obs.enabled:
         values = {"local_steps": int(local_steps), "lr": lr,
@@ -115,9 +147,7 @@ def make_fed_round_step(cfg: ModelConfig, policy: Policy = NO_POLICY, *,
                   "cohort_chunk": int(cohort_chunk),
                   "staleness_scheme": staleness_scheme,
                   "staleness_decay": staleness_decay}
-        values.update(aggregate.engine_attrs(
-            agg_engine, algorithm="fedhen", block_n=agg_block_n,
-            wire=wire))
+        values.update(aggregate.engine_attrs(spec))
         obs.ledger("round_step_build", values)
 
     def constrain_cohort(tree):
@@ -152,13 +182,13 @@ def make_fed_round_step(cfg: ModelConfig, policy: Policy = NO_POLICY, *,
         template = jax.tree.map(lambda x: x[0], cohort)
         mask = masking.transformer_subnet_mask(template, cfg)
         layout = None
-        if agg_engine == "flat":
-            layout = flatten.layout_of(template, total_multiple=agg_block_n)
+        if spec.engine == "flat":
+            layout = flatten.layout_of(template,
+                                       total_multiple=spec.block_n)
             if flat_mask is None:  # trace-time fallback; see docstring
                 flat_mask = flatten.pack_mask(layout, mask)
         agg_init, agg_fold, agg_finalize = aggregate.make_engine(
-            agg_engine, algorithm="fedhen", mask=mask, layout=layout,
-            flat_mask=flat_mask, block_n=agg_block_n, wire=wire)
+            spec.bind(mask=mask, layout=layout, flat_mask=flat_mask))
 
         if staleness is None:
             st_w = jnp.ones((k,), jnp.float32)

@@ -49,7 +49,10 @@ def build_trainer(args, telemetry=None) -> tuple:
         agg_memory_budget_mb=args.agg_memory_budget_mb,
         comm_dtype=args.comm_dtype, quant_block=args.quant_block,
         async_lag=args.async_lag, async_staleness=args.staleness,
-        async_decay=args.staleness_decay)
+        async_decay=args.staleness_decay,
+        variance_reduction=args.variance_reduction,
+        state_store_backend=args.state_store_backend)
+    fed.validate()
 
     if args.model == "resnet":
         data = synthetic_cifar(args.data_points, 10, seed=args.seed)
@@ -82,7 +85,10 @@ def _chunk_arg(v: str):
     return v if v == "auto" else int(v)
 
 
-def main(argv=None):
+def build_parser() -> argparse.ArgumentParser:
+    """The driver's full CLI.  Factored out of :func:`main` so tests can
+    assert the FedConfig <-> flag mapping stays complete (every config
+    field reachable from the command line or explicitly exempted)."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--model", choices=("resnet", "lm"), default="resnet")
     ap.add_argument("--arch", default="gemma2-2b")
@@ -139,6 +145,18 @@ def main(argv=None):
     ap.add_argument("--staleness-decay", type=float, default=0.5,
                     help="exponent a of the polynomial staleness decay "
                          "1/(1+s)^a")
+    ap.add_argument("--variance-reduction", default="none",
+                    choices=("none", "scaffold"),
+                    help="client-drift correction: 'scaffold' keeps a "
+                         "per-client control variate in the flat state "
+                         "store and corrects local gradients by c - c_i "
+                         "(Karimireddy et al. 2020, option II); cv "
+                         "exchange is billed raw f32 on top of the wire")
+    ap.add_argument("--state-store-backend", default="auto",
+                    choices=("auto", "device", "host", "mmap"),
+                    help="where the (N_clients, n_flat) per-client state "
+                         "rows live: device array, host numpy, or an "
+                         "mmap-backed file; 'auto' picks by footprint")
     ap.add_argument("--local-epochs", type=int, default=5)
     ap.add_argument("--lr", type=float, default=0.1)
     ap.add_argument("--batch-size", type=int, default=50)
@@ -167,7 +185,11 @@ def main(argv=None):
                     help="write the telemetry event stream as JSONL to "
                          "this path (implies --telemetry; render it with "
                          "tools/obs_report.py)")
-    args = ap.parse_args(argv)
+    return ap
+
+
+def main(argv=None):
+    args = build_parser().parse_args(argv)
 
     # the driver's prints always route through a telemetry stdout sink
     # (line formats are bit-identical — the sink prints log events

@@ -247,3 +247,111 @@ def report_path(path: str, target: Optional[float] = None,
     """Read a JSONL run log and return the rendered report."""
     return render(summarize(read_jsonl(path), target=target,
                             target_metric=target_metric))
+
+
+# ---------------------------------------------------------------------------
+# Run comparison (A vs B diff of two summarized logs)
+# ---------------------------------------------------------------------------
+
+def _delta(a: Optional[float], b: Optional[float]) -> Optional[float]:
+    return None if a is None or b is None else float(b) - float(a)
+
+
+def compare_summaries(a: Dict[str, Any],
+                      b: Dict[str, Any]) -> Dict[str, Any]:
+    """Diff two :func:`summarize` dicts (B relative to A).
+
+    The sections an A/B experiment actually argues over: per-phase wall
+    clock (medians), comm bytes per round + cumulative totals, and the
+    progress section's rounds-to-target / final metric — each as
+    ``{"a": ..., "b": ..., "delta": b - a}`` (``delta`` None when either
+    side is missing).  Config keys whose values differ are listed so a
+    report never silently compares apples to oranges.
+    """
+    cfg_a, cfg_b = a["run_config"], b["run_config"]
+    config_diff = {
+        k: {"a": cfg_a.get(k), "b": cfg_b.get(k)}
+        for k in sorted(set(cfg_a) | set(cfg_b))
+        if cfg_a.get(k) != cfg_b.get(k)
+    }
+    pa, pb = a["rounds"]["phase_wall"], b["rounds"]["phase_wall"]
+    phases = {}
+    for name in sorted(set(pa) | set(pb)):
+        ma = pa.get(name, {}).get("median_s")
+        mb = pb.get(name, {}).get("median_s")
+        phases[name] = {"a": ma, "b": mb, "delta": _delta(ma, mb)}
+    comm = {}
+    for key in ("bytes_down_per_round", "bytes_up_per_round",
+                "cum_total"):
+        va, vb = a["comm"].get(key), b["comm"].get(key)
+        comm[key] = {"a": va, "b": vb, "delta": _delta(va, vb)}
+    prog_a, prog_b = a["progress"], b["progress"]
+    progress = {
+        "metric": prog_a["metric"],
+        "rounds_to_target": {
+            "a": prog_a["rounds_to_target"],
+            "b": prog_b["rounds_to_target"],
+            "delta": _delta(prog_a["rounds_to_target"],
+                            prog_b["rounds_to_target"]),
+        },
+        "final": {"a": prog_a["final"], "b": prog_b["final"],
+                  "delta": _delta(prog_a["final"], prog_b["final"])},
+    }
+    return {
+        "config_diff": config_diff,
+        "rounds": {"a": a["rounds"]["n_rounds"],
+                   "b": b["rounds"]["n_rounds"]},
+        "phases": phases,
+        "comm": comm,
+        "progress": progress,
+    }
+
+
+def _fmt_pair(row: Dict[str, Any], fmt) -> str:
+    d = row["delta"]
+    sign = "" if d is None or d < 0 else "+"
+    return (f"A={fmt(row['a'])}  B={fmt(row['b'])}  "
+            f"delta={'-' if d is None else sign + fmt(d)}")
+
+
+def render_compare(cmp: Dict[str, Any]) -> str:
+    """Format a :func:`compare_summaries` dict as the printed diff."""
+    lines: List[str] = []
+    add = lines.append
+    add("== telemetry run comparison (B - A) ==")
+    add(f"rounds: A={cmp['rounds']['a']}  B={cmp['rounds']['b']}")
+    if cmp["config_diff"]:
+        add("")
+        add("-- config differences --")
+        for k, row in cmp["config_diff"].items():
+            add(f"  {k}: A={row['a']}  B={row['b']}")
+    if cmp["phases"]:
+        add("")
+        add("-- phase wall clock (median) --")
+        for name, row in cmp["phases"].items():
+            add(f"  {name}: " + _fmt_pair(row, _fmt_s))
+    add("")
+    add("-- comm --")
+    for key, row in cmp["comm"].items():
+        add(f"  {key}: " + _fmt_pair(row, _fmt_bytes))
+    p = cmp["progress"]
+    add("")
+    add(f"-- progress ({p['metric']}) --")
+    rt = p["rounds_to_target"]
+    if rt["a"] is not None or rt["b"] is not None:
+        add("  rounds_to_target: "
+            + _fmt_pair(rt, lambda v: "-" if v is None else f"{v:g}"))
+    add("  final: "
+        + _fmt_pair(p["final"], lambda v: "-" if v is None else f"{v:.4f}"))
+    return "\n".join(lines)
+
+
+def compare_paths(path_a: str, path_b: str,
+                  target: Optional[float] = None,
+                  target_metric: str = "loss_complex") -> str:
+    """Read two JSONL run logs and return the rendered A/B diff."""
+    sa = summarize(read_jsonl(path_a), target=target,
+                   target_metric=target_metric)
+    sb = summarize(read_jsonl(path_b), target=target,
+                   target_metric=target_metric)
+    return render_compare(compare_summaries(sa, sb))

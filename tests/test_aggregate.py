@@ -346,3 +346,134 @@ def test_flat_fold_uses_prebuilt_layout_and_mask():
         flat_mask=flat_mask)
     want_c, _ = _stream(cohort, mask, is_simple, valid, "fedhen", 9)
     _assert_tree_allclose(got_c, want_c, rtol=1e-6, atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# EngineSpec consolidation: the legacy loose-kwarg shims warn, the spec
+# path is warning-free, and both build literally the same program
+# ---------------------------------------------------------------------------
+
+import warnings
+
+
+def _spec_for(cohort, mask, algo="fedhen", engine="flat"):
+    template = jax.tree.map(lambda x: x[0], cohort)
+    layout = flatten.layout_of(template, total_multiple=512)
+    return template, aggregate.EngineSpec(
+        engine=engine, algorithm=algo, mask=mask, layout=layout,
+        flat_mask=flatten.pack_mask(layout, mask), block_n=512)
+
+
+def test_engine_spec_jaxpr_identity_with_legacy_kwargs():
+    """The refactor is pure plumbing: the spec-driven fold traces to the
+    IDENTICAL jaxpr as the deprecated loose-kwarg calls."""
+    cohort, mask, is_simple, valid = _random_case(11)
+    template, spec = _spec_for(cohort, mask)
+
+    def via_spec(cohort, is_simple, valid):
+        init, fold, finalize = aggregate.make_engine(spec)
+        state = init(template)
+        state = fold(state, cohort, is_simple, valid)
+        return finalize(state, template=template)
+
+    def via_legacy(cohort, is_simple, valid):
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            state = aggregate.streaming_init(
+                template, "fedhen", layout=spec.layout, block_n=512)
+            state = aggregate.streaming_fold(
+                state, cohort, is_simple, valid, mask, algorithm="fedhen",
+                layout=spec.layout, flat_mask=spec.flat_mask, block_n=512)
+            return aggregate.streaming_finalize(
+                state, mask, template, algorithm="fedhen",
+                layout=spec.layout, flat_mask=spec.flat_mask, block_n=512)
+
+    a = str(jax.make_jaxpr(via_spec)(cohort, is_simple, valid))
+    b = str(jax.make_jaxpr(via_legacy)(cohort, is_simple, valid))
+    assert a == b
+
+
+def test_legacy_entry_points_warn_and_match_spec():
+    """Every legacy signature emits DeprecationWarning naming its call
+    site — and still returns the spec path's exact result."""
+    cohort, mask, is_simple, valid = _random_case(12)
+    template, spec = _spec_for(cohort, mask)
+
+    with pytest.warns(DeprecationWarning, match="streaming_init"):
+        state = aggregate.streaming_init(template, "fedhen",
+                                         layout=spec.layout, block_n=512)
+    with pytest.warns(DeprecationWarning, match="streaming_fold"):
+        state = aggregate.streaming_fold(
+            state, cohort, is_simple, valid, mask, algorithm="fedhen",
+            layout=spec.layout, flat_mask=spec.flat_mask, block_n=512)
+    with pytest.warns(DeprecationWarning, match="streaming_finalize"):
+        legacy_c, _ = aggregate.streaming_finalize(
+            state, mask, template, algorithm="fedhen", layout=spec.layout,
+            flat_mask=spec.flat_mask, block_n=512)
+
+    init, fold, finalize = aggregate.make_engine(spec)
+    spec_c, _ = finalize(fold(init(template), cohort, is_simple, valid),
+                         template=template)
+    _assert_tree_allclose(legacy_c, spec_c, rtol=0, atol=0)
+
+    with pytest.warns(DeprecationWarning, match="make_engine"):
+        aggregate.make_engine("flat", algorithm="fedhen", mask=mask)
+    with pytest.warns(DeprecationWarning, match="engine_attrs"):
+        attrs = aggregate.engine_attrs("flat", algorithm="fedhen")
+    assert attrs["agg_engine"] == "flat" and attrs["agg_block_n"] == 2048
+
+    with pytest.warns(DeprecationWarning, match="tree_streaming_init"):
+        ts = aggregate.tree_streaming_init(template, "fedhen")
+    with pytest.warns(DeprecationWarning, match="tree_streaming_fold"):
+        ts = aggregate.tree_streaming_fold(ts, cohort, is_simple, valid,
+                                           mask, algorithm="fedhen")
+    with pytest.warns(DeprecationWarning, match="tree_streaming_finalize"):
+        aggregate.tree_streaming_finalize(ts, mask, template,
+                                          algorithm="fedhen")
+
+
+def test_spec_path_emits_no_deprecation():
+    """The modern path (what the trainer and launch/steps.py run) must
+    never trip the shims."""
+    cohort, mask, is_simple, valid = _random_case(13)
+    template, spec = _spec_for(cohort, mask)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        init, fold, finalize = aggregate.make_engine(spec)
+        state = init(template)
+        state = fold(state, cohort, is_simple, valid)
+        finalize(state, template=template)
+        aggregate.engine_attrs(spec)
+        tspec = spec.bind(engine="tree")
+        tinit, tfold, tfin = aggregate.make_engine(tspec)
+        tfin(tfold(tinit(template), cohort, is_simple, valid),
+             template=template)
+    ours = [w for w in caught
+            if issubclass(w.category, DeprecationWarning)
+            and "EngineSpec" in str(w.message)]
+    assert not ours, [str(w.message) for w in ours]
+
+
+def test_engine_attrs_records_the_full_spec():
+    cohort, mask, _, _ = _random_case(14)
+    template, spec = _spec_for(cohort, mask)
+    from repro.core import comm
+    spec = spec.bind(wire=comm.WireSpec("int8", 128),
+                     variance_reduction="scaffold")
+    attrs = aggregate.engine_attrs(spec)
+    assert attrs == {
+        "agg_engine": "flat", "algorithm": "fedhen", "agg_block_n": 512,
+        "agg_stream_dtype": "float32", "variance_reduction": "scaffold",
+        "wire_dtype": "int8", "wire_quantized": True,
+        "wire_quant_block": 128,
+    }
+
+
+def test_engine_spec_rejects_bad_combinations():
+    with pytest.raises(ValueError, match="unknown agg engine"):
+        aggregate.EngineSpec(engine="sparse")
+    with pytest.raises(ValueError):
+        aggregate.EngineSpec(algorithm="fedavg")
+    from repro.core import comm
+    with pytest.raises(ValueError, match="int8 wire requires the flat"):
+        aggregate.EngineSpec(engine="tree", wire=comm.WireSpec("int8", 128))

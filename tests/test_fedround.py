@@ -78,3 +78,29 @@ def test_round_step_int8_wire_matches_f32():
     for a, b in zip(jax.tree.leaves(q_c), jax.tree.leaves(ref_c)):
         amax = float(jnp.max(jnp.abs(b))) + 1e-12
         assert float(jnp.max(jnp.abs(a - b))) <= amax / 100.0
+
+
+def test_make_fed_round_step_engine_spec_shim():
+    """The launch-side factory takes ONE EngineSpec; the old loose kwargs
+    still work behind a DeprecationWarning, and mixing both is an
+    error."""
+    import pytest
+
+    from repro.core import aggregate, comm
+    from repro.launch.steps import make_fed_round_step
+    from repro.models.common import NO_POLICY
+
+    cfg = ModelConfig(n_layers=2, d_model=32, n_heads=2, n_kv_heads=2,
+                      d_ff=64, vocab_size=64, pattern=(LayerSpec("attn"),),
+                      exit_layer=1, compute_dtype="float32")
+    spec = aggregate.EngineSpec(algorithm="fedhen", block_n=512,
+                                wire=comm.WireSpec("float32", 128))
+    make_fed_round_step(cfg, NO_POLICY, local_steps=1, engine=spec)
+
+    with pytest.warns(DeprecationWarning, match="make_fed_round_step"):
+        make_fed_round_step(cfg, NO_POLICY, local_steps=1,
+                            agg_engine="flat", agg_block_n=512)
+
+    with pytest.raises(ValueError, match="either"):
+        make_fed_round_step(cfg, NO_POLICY, local_steps=1, engine=spec,
+                            agg_engine="flat")

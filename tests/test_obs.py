@@ -328,3 +328,69 @@ def test_report_rounds_to_target_acc_direction():
     s2 = obs_report.summarize(events, target=0.9,
                               target_metric="acc_simple")
     assert s2["progress"]["rounds_to_target"] is None
+
+
+def test_compare_summaries_and_render():
+    """--compare diff: config differences listed, per-section a/b/delta
+    rows computed B - A, rounds-to-target delta included."""
+    def events(vr, down, loss2):
+        return [
+            {"kind": "ledger", "name": "run_config",
+             "values": {"algorithm": "fedhen", "variance_reduction": vr}},
+            {"kind": "span", "name": "round", "round": 0, "dur_s": 0.5},
+            {"kind": "span", "name": "round", "round": 1, "dur_s": 0.5},
+            {"kind": "ledger", "name": "comm_bytes", "round": 1,
+             "values": {"down": down, "up": down, "cum_down": 2 * down,
+                        "cum_up": 2 * down, "cum_total": 4 * down}},
+            {"kind": "ledger", "name": "eval", "round": 1,
+             "values": {"loss_complex": 0.9}},
+            {"kind": "ledger", "name": "eval", "round": 2,
+             "values": {"loss_complex": loss2}},
+        ]
+
+    a = obs_report.summarize(events("none", 100.0, 0.6), target=0.5)
+    b = obs_report.summarize(events("scaffold", 200.0, 0.4), target=0.5)
+    cmp = obs_report.compare_summaries(a, b)
+    assert cmp["config_diff"] == {
+        "variance_reduction": {"a": "none", "b": "scaffold"}}
+    assert cmp["comm"]["bytes_down_per_round"]["delta"] == 100.0
+    assert cmp["comm"]["cum_total"]["delta"] == 400.0
+    # A never reaches 0.5; B reaches it at round 2
+    rt = cmp["progress"]["rounds_to_target"]
+    assert rt["a"] is None and rt["b"] == 2 and rt["delta"] is None
+    assert cmp["progress"]["final"]["delta"] == pytest.approx(-0.2)
+    assert cmp["phases"]["round"]["delta"] == pytest.approx(0.0)
+
+    rendered = obs_report.render_compare(cmp)
+    for needle in ("telemetry run comparison", "config differences",
+                   "variance_reduction: A=none  B=scaffold",
+                   "-- comm --", "rounds_to_target"):
+        assert needle in rendered
+
+
+def test_compare_paths_cli(tmp_path):
+    """The file-level entry point diffs two JSONL logs end to end."""
+    import subprocess
+    import sys
+
+    def write(path, down):
+        with open(path, "w") as f:
+            for e in (
+                    {"kind": "ledger", "name": "run_config",
+                     "values": {"algorithm": "fedhen"}},
+                    {"kind": "ledger", "name": "comm_bytes", "round": 0,
+                     "values": {"down": down, "up": down,
+                                "cum_total": 2 * down}}):
+                f.write(json.dumps(e) + "\n")
+
+    pa, pb = str(tmp_path / "a.jsonl"), str(tmp_path / "b.jsonl")
+    write(pa, 100.0)
+    write(pb, 300.0)
+    out = obs_report.compare_paths(pa, pb)
+    assert "bytes_down_per_round" in out and "+200" in out
+
+    proc = subprocess.run(
+        [sys.executable, "tools/obs_report.py", "--compare", pa, pb],
+        capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stderr
+    assert "telemetry run comparison" in proc.stdout

@@ -1,0 +1,340 @@
+"""SCAFFOLD variance reduction end-to-end (the state-store tentpole's
+first consumer): round-1 bit-equality with the plain protocol, a
+closed-form option-II oracle, flat/tree + chunked/unchunked parity
+across all three algorithms, NaN/pad-slot row hygiene, the async engine,
+wire dtypes, comm billing, and checkpoint resume."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpoint import restore_trainer, save_trainer
+from repro.configs.base import FedConfig, LayerSpec, ModelConfig
+from repro.core import async_rounds, comm, flatten
+from repro.core.adapters import LMAdapter
+from repro.core.federated import (FederatedTrainer, local_step_count,
+                                  make_client_trainer)
+from repro.data.federated import iid_split
+from repro.data.synthetic import synthetic_lm
+
+TINY = ModelConfig(n_layers=4, d_model=32, n_heads=2, n_kv_heads=2,
+                   d_ff=64, vocab_size=64, pattern=(LayerSpec("attn"),),
+                   exit_layer=2, compute_dtype="float32")
+
+ALGOS = ["fedhen", "noside", "decouple"]
+
+
+def _make_trainer(algorithm="fedhen", *, n_devices=4, participation=1.0,
+                  variance_reduction="scaffold", **fed_kw):
+    fed = FedConfig(n_devices=n_devices, n_simple=n_devices // 2,
+                    participation=participation, rounds=3, local_epochs=1,
+                    lr=0.1, batch_size=4, algorithm=algorithm, seed=0,
+                    variance_reduction=variance_reduction, **fed_kw)
+    data = synthetic_lm(n_devices * 8, 16, TINY.vocab_size, seed=1)
+    shards = iid_split(data, fed.n_devices, seed=2)
+    return FederatedTrainer(LMAdapter(TINY), fed, shards)
+
+
+def _max_abs_diff(a, b):
+    return max(float(jnp.max(jnp.abs(x.astype(jnp.float32)
+                                     - y.astype(jnp.float32))))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def _server_close(a, b, tol=0.0):
+    d = _max_abs_diff(a.server.complex, b.server.complex)
+    assert d <= tol, d
+    if a.fed.algorithm == "decouple":
+        d = _max_abs_diff(a.server.simple_host, b.server.simple_host)
+        assert d <= tol, d
+
+
+# ---------------------------------------------------------------------------
+# Zero-init contract: round 1 is bit-identical to variance_reduction="none"
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("algorithm", ALGOS)
+def test_round1_bit_identical_to_none(algorithm):
+    """c = c_i = 0 means the correction and every gradient are untouched:
+    the first SCAFFOLD round must reproduce the plain protocol exactly
+    (same trained models, same aggregate, bit for bit)."""
+    plain = _make_trainer(algorithm, variance_reduction="none")
+    scaf = _make_trainer(algorithm)
+    m_plain = plain.run_round()
+    m_scaf = scaf.run_round()
+    _server_close(plain, scaf, tol=0.0)
+    assert m_plain == m_scaf
+    # ... and the control variates MOVED (the second round diverges)
+    assert float(jnp.linalg.norm(scaf.cv_global)) > 0.0
+    plain.run_round()
+    scaf.run_round()
+    assert _max_abs_diff(plain.server.complex, scaf.server.complex) > 0.0
+
+
+# ---------------------------------------------------------------------------
+# Closed-form option-II oracle (one client per population, K static)
+# ---------------------------------------------------------------------------
+
+def test_option_ii_oracle_single_client_populations():
+    """With one simple + one complex client at full participation, the
+    round's store rows must equal the hand-computed
+    ``dc = (x - y)/(K*lr) - c`` (c = 0 in round 1): ``y`` is recomputed
+    here by invoking the same client trainer with the same derived key,
+    so the test pins the packing, masking, weighting AND the per-client
+    RNG derivation."""
+    tr = _make_trainer("fedhen", n_devices=2)
+    fed, layout = tr.fed, tr.layout
+    server0 = jax.tree.map(jnp.copy, tr.server.complex)
+    plan = tr.sampler.plan(0)
+    assert list(plan.simple_ids) == [0] and list(plan.complex_ids) == [1]
+
+    tr.run_round()
+
+    # replicate the round's broadcast + per-client training exactly
+    key = jax.random.PRNGKey(fed.seed * 100003 + 0)
+    rs, rc = jax.random.split(key)
+    bc = comm.broadcast_roundtrip(tr.wire, layout, server0)
+    x_flat = flatten.pack(layout, bc)
+    adapter = tr.adapter
+    shard = lambda i: jax.tree.map(lambda v: v[0], tr._gather([i]))
+
+    train_s = make_client_trainer(adapter.loss_simple, fed)
+    y_s, _ = train_s(bc, shard(0), jax.random.fold_in(rs, 0))
+    train_c = make_client_trainer(adapter.loss_side, fed)
+    y_c, _ = train_c(bc, shard(1), jax.random.fold_in(rc, 0))
+
+    k_steps = local_step_count(tr._gather([0]), fed)
+    inv = 1.0 / (k_steps * fed.lr)
+    dc_s = jnp.where(tr.flat_mask,
+                     (x_flat - flatten.pack(layout, y_s)) * inv, 0.0)
+    dc_c = (x_flat - flatten.pack(layout, y_c)) * inv
+
+    rows = tr.cv_store.to_array()
+    assert float(jnp.max(jnp.abs(rows[0] - dc_s))) == 0.0
+    assert float(jnp.max(jnp.abs(rows[1] - dc_c))) == 0.0
+    # server update: c += (1/N) * sum_i dc_i (raw sum, never normalized
+    # by cohort weights — dc_s is zero outside M so the masked fold's
+    # w_out gating changes nothing elementwise)
+    want = (dc_s + dc_c) / fed.n_devices
+    np.testing.assert_allclose(np.asarray(tr.cv_global), np.asarray(want),
+                               rtol=1e-6, atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# Engine parity: flat vs tree, chunked vs unchunked, all three algorithms
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("algorithm", ALGOS)
+def test_flat_vs_tree_engine_parity(algorithm):
+    """The cv fold is a flat op on BOTH engines; after two rounds the
+    server models and control variates must agree up to summation
+    order."""
+    flat = _make_trainer(algorithm, agg_engine="flat")
+    tree = _make_trainer(algorithm, agg_engine="tree")
+    for _ in range(2):
+        flat.run_round()
+        tree.run_round()
+    _server_close(flat, tree, tol=2e-5)
+    np.testing.assert_allclose(np.asarray(flat.cv_global),
+                               np.asarray(tree.cv_global),
+                               rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(flat.cv_store.to_array(),
+                               tree.cv_store.to_array(),
+                               rtol=1e-4, atol=1e-6)
+
+
+@pytest.mark.parametrize("algorithm", ALGOS)
+def test_chunked_parity(algorithm):
+    """Streaming the cohort one client at a time must fold the same cv
+    state as the single-chunk round (the rows ride the scan outputs)."""
+    whole = _make_trainer(algorithm, cohort_chunk=0)
+    chunked = _make_trainer(algorithm, cohort_chunk=1)
+    for _ in range(2):
+        whole.run_round()
+        chunked.run_round()
+    _server_close(whole, chunked, tol=2e-5)
+    np.testing.assert_allclose(np.asarray(whole.cv_global),
+                               np.asarray(chunked.cv_global),
+                               rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(whole.cv_store.to_array(),
+                               chunked.cv_store.to_array(),
+                               rtol=1e-4, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Row hygiene: NaN devices and uniform-sampling pad slots
+# ---------------------------------------------------------------------------
+
+class _NanAdapter:
+    """Tiny real-training adapter (mirrors tests/test_async.py): params
+    drift toward each client's data mean, so a NaN shard produces a
+    NaN-trained device the fold — and the row scatter — must exclude."""
+
+    def init(self, key):
+        return {"a": jnp.zeros((4,), jnp.float32),
+                "b": jnp.zeros((4,), jnp.float32)}
+
+    def subnet_mask(self, params):
+        return {"a": jnp.asarray(True), "b": jnp.asarray(False)}
+
+    @staticmethod
+    def _loss(params, batch):
+        x = batch["x"]                       # (B, 4)
+        err_a = params["a"][None] - x
+        err_b = params["b"][None] - 2.0 * x
+        return jnp.mean(err_a ** 2) + jnp.mean(err_b ** 2)
+
+    loss_simple = loss_complex = loss_side = _loss
+
+
+def test_nan_device_keeps_previous_row_and_finite_c():
+    """A NaN device folds at weight 0 AND keeps its previous control
+    variate: a NaN row must never persist in the store, and c stays
+    finite."""
+    fed = FedConfig(n_devices=4, n_simple=2, participation=1.0,
+                    local_epochs=1, lr=0.1, batch_size=4,
+                    algorithm="fedhen", seed=0,
+                    variance_reduction="scaffold")
+    rng = np.random.default_rng(0)
+    shards = [{"x": jnp.asarray(rng.normal(size=(8, 4)).astype(np.float32))}
+              for _ in range(fed.n_devices)]
+    shards[1]["x"] = shards[1]["x"].at[0, 0].set(jnp.nan)  # poisoned client
+    tr = FederatedTrainer(_NanAdapter(), fed, shards)
+    m = tr.run_round()
+    assert m["n_valid"] == fed.n_devices - 1
+    rows = tr.cv_store.to_array()
+    assert np.isfinite(rows).all()
+    np.testing.assert_array_equal(rows[1], 0.0)   # kept its (zero) row
+    assert np.isfinite(np.asarray(tr.cv_global)).all()
+    # the healthy clients' rows updated
+    for i in (0, 2, 3):
+        assert np.abs(rows[i]).max() > 0.0
+
+
+def test_uniform_pad_slots_never_clobber_rows():
+    """Uniform super-cohort mode: unfilled slots wrap real clients' ids —
+    scattering them back would overwrite a row the wrapped client just
+    wrote.  Only REAL slots may touch the store."""
+    tr = _make_trainer("fedhen", n_devices=8, participation=0.25,
+                       sample_uniform=True)
+    # find a round whose plan actually has pad slots
+    for r in range(20):
+        plan = tr.sampler.plan(tr.server.round)
+        if not plan.all_real:
+            break
+        tr.run_round()
+    else:
+        pytest.fail("no uniform round with pad slots in 20 draws")
+    before = tr.cv_store.to_array().copy()
+    tr.run_round()
+    after = tr.cv_store.to_array()
+    real = set(int(i) for i in plan.real_ids())
+    changed = {i for i in range(tr.fed.n_devices)
+               if np.abs(after[i] - before[i]).max() > 0.0}
+    assert changed <= real, (changed, real)
+    assert changed, "no real row updated"
+
+
+# ---------------------------------------------------------------------------
+# Async engine: lag=0 bit-parity, lag=1 liveness
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("algorithm", ALGOS)
+def test_async_lag0_bit_parity_with_scaffold(algorithm):
+    """lag=0 through the async code path (version stack, float weights,
+    shared scan) must reproduce the synchronous SCAFFOLD round bit for
+    bit — server state, c, and every store row."""
+    sync = _make_trainer(algorithm, n_devices=6, cohort_chunk=1)
+    tr = _make_trainer(algorithm, n_devices=6, cohort_chunk=1)
+    eng = async_rounds.AsyncRoundEngine(tr, lag=0)
+    for _ in range(2):
+        m_sync = sync.run_round()
+        m_async = eng.run_round()
+    _server_close(sync, tr, tol=0.0)
+    assert m_sync == m_async
+    assert _max_abs_diff([sync.cv_global], [tr.cv_global]) == 0.0
+    np.testing.assert_array_equal(sync.cv_store.to_array(),
+                                  tr.cv_store.to_array())
+    assert sync.total_bytes == tr.total_bytes
+
+
+def test_async_lag1_scaffold_runs_and_stays_finite():
+    """Nonzero lag: stale chunks compute dc against the stale broadcast
+    they actually trained on (x is the selected version).  The rounds
+    must stay finite and move the control variates."""
+    tr = _make_trainer("fedhen", n_devices=6, cohort_chunk=1, async_lag=1)
+    assert tr.async_engine is not None
+    for _ in range(3):
+        m = tr.run_round()
+        assert np.isfinite(m["loss_simple"]) and np.isfinite(
+            m["loss_complex"])
+    assert np.isfinite(np.asarray(tr.cv_global)).all()
+    assert float(jnp.linalg.norm(tr.cv_global)) > 0.0
+    assert np.isfinite(tr.cv_store.to_array()).all()
+    assert tr.cv_store.scattered_bytes > 0
+
+
+# ---------------------------------------------------------------------------
+# Wire dtypes + comm billing
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("comm_dtype", ["bfloat16", "int8"])
+def test_scaffold_through_nonidentity_wires(comm_dtype):
+    """The cv exchange moves raw f32 alongside any wire: SCAFFOLD must
+    compose with the bf16 and quantized paths and stay finite."""
+    tr = _make_trainer("fedhen", comm_dtype=comm_dtype)
+    for _ in range(2):
+        m = tr.run_round()
+        assert np.isfinite(m["loss_complex"])
+    assert np.isfinite(np.asarray(tr.cv_global)).all()
+    assert np.isfinite(tr.cv_store.to_array()).all()
+
+
+def test_cv_exchange_billing():
+    """SCAFFOLD bills the control-variate exchange at raw f32 of the
+    trained element counts, both directions, on top of the wire."""
+    plain = _make_trainer("fedhen", variance_reduction="none")
+    scaf = _make_trainer("fedhen")
+    n_m = int(np.sum(np.asarray(scaf.flat_mask)))
+    extra_one_way = (scaf.k_simple * 4.0 * n_m
+                     + scaf.k_complex * 4.0 * scaf.layout.n_params)
+    assert scaf.bytes_per_round - plain.bytes_per_round == pytest.approx(
+        2.0 * extra_one_way)
+    scaf.run_round()
+    assert scaf.total_bytes == pytest.approx(scaf.bytes_per_round)
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint: the cv store rides the sidecar, resume is exact
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_resume_reproduces_uninterrupted_run(tmp_path):
+    path = str(tmp_path / "ckpt.npz")
+    a = _make_trainer("fedhen")
+    a.run_round()
+    a.run_round()
+    save_trainer(path, a)
+    a.run_round()
+
+    b = _make_trainer("fedhen")
+    restore_trainer(path, b)
+    assert b.server.round == 2
+    b.run_round()
+    _server_close(a, b, tol=0.0)
+    np.testing.assert_array_equal(np.asarray(a.cv_global),
+                                  np.asarray(b.cv_global))
+    np.testing.assert_array_equal(a.cv_store.to_array(),
+                                  b.cv_store.to_array())
+
+
+def test_checkpoint_without_cv_sidecar_rejected(tmp_path):
+    """Restoring a plain checkpoint into a SCAFFOLD trainer must fail
+    loudly — silently resetting c/c_i would corrupt the correction."""
+    path = str(tmp_path / "ckpt.npz")
+    plain = _make_trainer("fedhen", variance_reduction="none")
+    plain.run_round()
+    save_trainer(path, plain)
+    scaf = _make_trainer("fedhen")
+    with pytest.raises(ValueError, match="no __cv_store__ sidecar"):
+        restore_trainer(path, scaf)

@@ -1,0 +1,92 @@
+"""Per-client flat-vector state store (core/state_store.py): backend
+resolution, the gather/scatter round-jit seam on every backend, byte
+counters, checkpoint payloads, and the mmap lifecycle."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import state_store
+from repro.core.state_store import (DEVICE_LIMIT_BYTES, HOST_LIMIT_BYTES,
+                                    FlatStateStore, resolve_backend)
+
+
+def test_resolve_backend_auto_thresholds():
+    assert resolve_backend("auto", DEVICE_LIMIT_BYTES) == "device"
+    assert resolve_backend("auto", DEVICE_LIMIT_BYTES + 1) == "host"
+    assert resolve_backend("auto", HOST_LIMIT_BYTES) == "host"
+    assert resolve_backend("auto", HOST_LIMIT_BYTES + 1) == "mmap"
+    for explicit in ("device", "host", "mmap"):
+        assert resolve_backend(explicit, 10**18) == explicit
+    with pytest.raises(ValueError, match="unknown state-store backend"):
+        resolve_backend("gpu", 0)
+
+
+def test_bad_geometry_rejected():
+    with pytest.raises(ValueError, match="n_clients"):
+        FlatStateStore(0, 8)
+    with pytest.raises(ValueError, match="n_flat"):
+        FlatStateStore(8, 0)
+
+
+@pytest.mark.parametrize("backend", ["device", "host", "mmap"])
+def test_gather_scatter_roundtrip(backend):
+    store = FlatStateStore(10, 16, backend=backend)
+    assert store.backend == backend
+    assert store.nbytes == 10 * 16 * 4
+    ids = np.array([3, 7, 0])
+    rows = store.gather(ids)
+    assert isinstance(rows, jax.Array)
+    assert rows.shape == (3, 16)
+    np.testing.assert_array_equal(np.asarray(rows), 0.0)
+
+    new = np.arange(3 * 16, dtype=np.float32).reshape(3, 16)
+    store.scatter(ids, new)
+    np.testing.assert_array_equal(np.asarray(store.gather(ids)), new)
+    # untouched rows stay zero
+    np.testing.assert_array_equal(
+        np.asarray(store.gather(np.array([1, 9]))), 0.0)
+    # counters: 3 gathers of 3,3,2 rows + one scatter of 3
+    row_bytes = 16 * 4
+    assert store.gathered_bytes == (3 + 3 + 2) * row_bytes
+    assert store.scattered_bytes == 3 * row_bytes
+    store.close()
+
+
+@pytest.mark.parametrize("backend", ["device", "host", "mmap"])
+def test_to_array_load_roundtrip(backend):
+    store = FlatStateStore(4, 8, backend=backend)
+    store.scatter(np.array([1, 2]), np.ones((2, 8), np.float32))
+    payload = store.to_array()
+    assert payload.shape == (4, 8)
+
+    fresh = FlatStateStore(4, 8, backend=backend)
+    fresh.load(payload)
+    np.testing.assert_array_equal(fresh.to_array(), payload)
+    with pytest.raises(ValueError, match="shape mismatch"):
+        fresh.load(np.zeros((5, 8), np.float32))
+    store.close()
+    fresh.close()
+
+
+def test_mmap_backing_file_lifecycle():
+    store = FlatStateStore(4, 8, backend="mmap")
+    path = store._mmap_path
+    assert path is not None and os.path.exists(path)
+    store.scatter(np.array([0]), np.ones((1, 8), np.float32))
+    store.close()
+    assert not os.path.exists(path)
+    assert store._mmap_path is None
+    store.close()  # idempotent
+
+
+def test_gather_returns_copy_not_view():
+    """A later scatter must not mutate rows a round already gathered
+    (the round jit's inputs are by-value)."""
+    store = FlatStateStore(4, 8, backend="host")
+    before = store.gather(np.array([2]))
+    store.scatter(np.array([2]), np.full((1, 8), 7.0, np.float32))
+    np.testing.assert_array_equal(np.asarray(before), 0.0)

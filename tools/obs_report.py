@@ -5,9 +5,13 @@ logic).  Typical use, after a run with ``--telemetry --telemetry-out``:
 
     PYTHONPATH=src python tools/obs_report.py run.jsonl
     PYTHONPATH=src python tools/obs_report.py run.jsonl --target 0.15
+    PYTHONPATH=src python tools/obs_report.py --compare a.jsonl b.jsonl
 
 ``--target`` reports rounds-to-target on ``--metric`` (default
-``loss_complex``) — the headline FedHeN comparison number.
+``loss_complex``) — the headline FedHeN comparison number.  ``--compare``
+diffs two run logs (B relative to A): per-phase wall clock, bytes/round,
+rounds-to-target — the A/B view a SCAFFOLD-vs-FedAvg or wire-format
+experiment reads.
 """
 
 from __future__ import annotations
@@ -19,18 +23,31 @@ import sys
 sys.path.insert(
     0, str(pathlib.Path(__file__).resolve().parent.parent / "src"))
 
-from repro.obs.report import report_path  # noqa: E402
+from repro.obs.report import compare_paths, report_path  # noqa: E402
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
-        description="Render a telemetry JSONL run log")
-    ap.add_argument("jsonl", help="run log written by --telemetry-out")
+        description="Render (or diff) telemetry JSONL run logs")
+    ap.add_argument("jsonl", nargs="?", default=None,
+                    help="run log written by --telemetry-out")
+    ap.add_argument("--compare", nargs=2, metavar=("A", "B"), default=None,
+                    help="diff two run logs instead (B relative to A)")
     ap.add_argument("--target", type=float, default=None,
                     help="rounds-to-target threshold on --metric")
     ap.add_argument("--metric", default="loss_complex",
                     help="eval metric for --target (default: loss_complex)")
     args = ap.parse_args(argv)
+    if args.compare is not None:
+        if args.jsonl is not None:
+            ap.error("pass either a single run log or --compare A B, "
+                     "not both")
+        print(compare_paths(args.compare[0], args.compare[1],
+                            target=args.target,
+                            target_metric=args.metric))
+        return 0
+    if args.jsonl is None:
+        ap.error("a run log is required (or --compare A B)")
     print(report_path(args.jsonl, target=args.target,
                       target_metric=args.metric))
     return 0
