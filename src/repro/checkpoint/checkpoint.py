@@ -212,6 +212,7 @@ def restore_server_flat(path: str, server, layout):
 _CLIENT_STATE_KEY = "__client_state__"
 _CV_STORE_KEY = "__cv_store__"
 _CV_GLOBAL_KEY = "__cv_global__"
+_EF_STORE_KEY = "__ef_store__"
 
 
 def save_trainer(path: str, trainer, *, fmt: str = "tree") -> None:
@@ -232,11 +233,17 @@ def save_trainer(path: str, trainer, *, fmt: str = "tree") -> None:
       the server control variate (``__cv_global__``) — SCAFFOLD's state
       is part of the optimizer, so a resume that dropped it would change
       the trajectory.  Both are raw f32 in every checkpoint format.
+    * under ``error_feedback=True``, the per-client wire-compression
+      residual store (``__ef_store__``, same ``(N, n_flat)`` shape as the
+      control variates) — the residuals ARE the compression error the
+      clients still owe the server, so a resume that dropped them would
+      silently discard un-uploaded signal.  Raw f32 in every format.
     """
     extra_meta = {
         "sampler": trainer.sampler.state_dict(),
         "client_state_columns": list(trainer.client_state.columns),
         "variance_reduction": trainer.fed.variance_reduction,
+        "error_feedback": trainer.fed.error_feedback,
     }
     extra_arrays = {
         _CLIENT_STATE_KEY: np.asarray(trainer.client_state.array),
@@ -244,6 +251,8 @@ def save_trainer(path: str, trainer, *, fmt: str = "tree") -> None:
     if trainer.cv_store is not None:
         extra_arrays[_CV_STORE_KEY] = trainer.cv_store.to_array()
         extra_arrays[_CV_GLOBAL_KEY] = np.asarray(trainer.cv_global)
+    if trainer.ef_store is not None:
+        extra_arrays[_EF_STORE_KEY] = trainer.ef_store.to_array()
     if fmt == "flat":
         save_server_flat(path, trainer.server, trainer.layout,
                          wire=trainer.wire, extra_meta=extra_meta,
@@ -291,3 +300,14 @@ def restore_trainer(path: str, trainer, *, fmt: str = "tree") -> None:
                     f"with variance_reduction="
                     f"{meta.get('variance_reduction', 'none')!r}); "
                     "resuming would silently reset the control variates")
+        if trainer.ef_store is not None:
+            if _EF_STORE_KEY in data:
+                trainer.ef_store.load(data[_EF_STORE_KEY])
+            else:
+                raise ValueError(
+                    "trainer has error_feedback=True but the checkpoint "
+                    "carries no __ef_store__ sidecar (saved with "
+                    f"error_feedback="
+                    f"{meta.get('error_feedback', False)!r}); resuming "
+                    "would silently drop the clients' compression "
+                    "residuals")

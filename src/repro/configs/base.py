@@ -355,6 +355,18 @@ class FedConfig:
     # Must divide the flat layout's lane alignment (128) so scale groups
     # never cross a LeafSlot boundary.
     quant_block: int = 128
+    # Wire v2 upload-path knobs (core/comm.py).  topk_frac < 1 uploads
+    # only the k = ceil(frac * n) largest-|delta| entries as index+value
+    # payloads (k rounded up to the 128-lane multiple); stochastic
+    # rounding makes the lossy encode unbiased (seeded per client+round);
+    # error_feedback keeps a per-client residual row
+    # (core/state_store.py) accumulating the compression error so it is
+    # re-uploaded next participation.  Any of the three switches the
+    # upload from full params to deltas vs the trained-on broadcast; all
+    # defaults leave the pre-existing wire bit-identical.
+    topk_frac: float = 1.0
+    stochastic_rounding: bool = False
+    error_feedback: bool = False
     # Asynchronous round engine (core/async_rounds.py): bounded staleness
     # lag measured in chunk folds.  Chunk ``i`` of a round trains on the
     # server params published at fold ``i - async_lag`` of the global fold
@@ -413,12 +425,21 @@ class FedConfig:
             raise ValueError(f"cohort_chunk must be an int or 'auto', got "
                              f"{self.cohort_chunk!r}")
         # wire validation lives with the wire (one source of truth for the
-        # dtype set + quant_block | lane-alignment rule)
+        # dtype set, quant_block | lane-alignment rule and the v2 knob
+        # rules: topk_frac range, stochastic-on-f32, EF-on-lossless)
         from repro.core.comm import WireSpec
-        WireSpec(self.comm_dtype, self.quant_block)
+        spec = WireSpec(self.comm_dtype, self.quant_block,
+                        topk_frac=self.topk_frac,
+                        stochastic=self.stochastic_rounding,
+                        error_feedback=self.error_feedback)
         if self.comm_dtype == "int8" and self.agg_engine != "flat":
             raise ValueError("comm_dtype=int8 requires agg_engine='flat' "
                              "(the dequantizing fold is a flat-buffer op)")
+        if spec.uses_deltas and self.agg_engine != "flat":
+            raise ValueError("compressed uploads (topk_frac < 1, "
+                             "stochastic_rounding or error_feedback) require "
+                             "agg_engine='flat' (the delta fold is a "
+                             "flat-buffer op)")
         if self.async_lag < 0:
             raise ValueError("async_lag must be >= 0 (folds of broadcast "
                              f"staleness), got {self.async_lag}")

@@ -119,6 +119,11 @@ class EngineSpec:
                 and self.wire.is_quantized):
             raise ValueError("int8 wire requires the flat engine "
                              "(dequantizing fold is a flat-buffer op)")
+        if (self.engine == "tree" and self.wire is not None
+                and self.wire.uses_deltas):
+            raise ValueError("compressed uploads (topk/stochastic/"
+                             "error-feedback wire) require the flat engine "
+                             "(the delta fold is a flat-buffer op)")
 
     @classmethod
     def from_config(cls, fed, *, mask: Tree = None,
@@ -269,6 +274,32 @@ class StreamState(NamedTuple):
     cv_acc: Optional[jax.Array] = None
 
 
+class SparseChunk(NamedTuple):
+    """One chunk's delta-mode uploads (wire v2, ``core/comm.py``).
+
+    When the wire ``uses_deltas`` (top-k / stochastic / error-feedback),
+    clients upload the encoded *difference* vs the flat decoded broadcast
+    they trained on — ``base`` here, one ``(n_flat,)`` f32 vector shared
+    by the chunk.  Each client's true upload is
+    ``base + decode(row z of values)``, so the fold adds
+    ``(sum_z w[z]) * base`` densely (ONE Z=1 masked accumulate with the
+    summed weights) plus every encoded delta row at its own weight —
+    the same total as folding the dense uploads, without materializing
+    them.
+
+    ``indices=None`` means the delta payload is dense (EF/stochastic
+    without top-k): ``values`` is ``(Z, n_flat)`` and folds through the
+    plain (bf16/f32) or dequantizing (int8 — ``scales`` present)
+    accumulate.  With top-k, ``values``/``indices`` are the compacted
+    ``(Z, k)`` payloads (``scales`` grouped over the compacted axis)
+    scattered by the ``masked_scatter_acc`` kernel variant — no dense
+    f32 cohort copy on either path."""
+    base: jax.Array
+    values: jax.Array
+    scales: Optional[jax.Array]
+    indices: Optional[jax.Array]
+
+
 def _layout_for(tree: Tree, layout, block_n: int, *, stacked: bool = False):
     if layout is not None:
         return layout
@@ -310,7 +341,8 @@ def streaming_fold(state: StreamState, chunk: Tree, is_simple: jax.Array,
                    stream_dtype=jnp.float32,
                    wire: Optional[comm.WireSpec] = None,
                    force_pallas_interpret: bool = False,
-                   cv_chunk: Optional[jax.Array] = None) -> StreamState:
+                   cv_chunk: Optional[jax.Array] = None,
+                   sparse_chunk: Optional[SparseChunk] = None) -> StreamState:
     """Fold one stacked chunk of client models into the flat sums.
 
     Args:
@@ -329,6 +361,13 @@ def streaming_fold(state: StreamState, chunk: Tree, is_simple: jax.Array,
         folded into ``state.cv_acc`` with the same per-client weights and
         flat mask as the params — one extra accumulating launch, nothing
         else changes.
+      sparse_chunk: delta-mode uploads (:class:`SparseChunk`; wire v2)
+        REPLACING the dense ``chunk`` fold — ``chunk`` may then be
+        ``None`` (the spec's layout sizes everything).  Requires a wire
+        whose ``uses_deltas`` is true; the fold adds the shared base
+        densely at the summed weights plus each encoded delta row
+        (scatter-fold when ``indices`` is present, dequantizing/plain
+        accumulate otherwise).
       force_pallas_interpret: run the kernel path in interpret mode
         (tests on CPU).
 
@@ -372,7 +411,22 @@ def streaming_fold(state: StreamState, chunk: Tree, is_simple: jax.Array,
     quantized = wire is not None and wire.is_quantized
     if wire is not None and not wire.is_identity and not quantized:
         stream_dtype = wire.payload_dtype      # bf16 wire == bf16 stream
-    if force_pallas_interpret or agg_ops.use_pallas():
+    if sparse_chunk is not None:
+        if wire is None or not wire.uses_deltas:
+            raise ValueError("sparse_chunk requires a delta-mode wire "
+                             "(topk_frac < 1, stochastic or error_feedback)")
+        if flat_mask is None:
+            flat_mask = flatten.pack_mask(layout, mask)
+        acc = _fold_sparse(state.acc, sparse_chunk, flat_mask, w_in, w_out,
+                           quant_block=wire.quant_block, block_n=block_n,
+                           force_pallas_interpret=force_pallas_interpret)
+        acc_out = state.acc_out
+        if acc_out is not None:                # decouple reuses the upload
+            acc_out = _fold_sparse(
+                acc_out, sparse_chunk, flat_mask, w_out, w_out,
+                quant_block=wire.quant_block, block_n=block_n,
+                force_pallas_interpret=force_pallas_interpret)
+    elif force_pallas_interpret or agg_ops.use_pallas():
         if flat_mask is None:
             flat_mask = flatten.pack_mask(layout, mask)
         if quantized:
@@ -423,6 +477,55 @@ def streaming_fold(state: StreamState, chunk: Tree, is_simple: jax.Array,
                           force_pallas_interpret=force_pallas_interpret)
     return StreamState(acc, acc_out, state.tot_in + jnp.sum(w_in),
                        state.tot_out + jnp.sum(w_out), cv_acc)
+
+
+def _fold_sparse(acc: jax.Array, sp: SparseChunk, flat_mask: jax.Array,
+                 w_in: jax.Array, w_out: jax.Array, *, quant_block: int,
+                 block_n: int,
+                 force_pallas_interpret: bool = False) -> jax.Array:
+    """Fold one delta-mode chunk: ``sum_z w[z] * (base + d_hat[z])``
+    rewritten as ``(sum_z w[z]) * base + sum_z w[z] * d_hat[z]``.
+
+    The base term is ONE Z=1 masked accumulate at the summed weights
+    (base is the server broadcast — always finite, so summed weights
+    need no per-client NaN gating; an all-invalid chunk sums to weight
+    0 and contributes nothing).  The delta term dispatches on payload
+    shape: compacted index+value rows go through the scatter-fold
+    kernel/ref, dense rows through the dequantizing (int8) or plain
+    (bf16/f32) accumulate — same NaN/pad weight gating as every fold."""
+    kernel = force_pallas_interpret or agg_ops.use_pallas()
+    base = sp.base.astype(jnp.float32)[None, :]
+    sw_in, sw_out = jnp.sum(w_in)[None], jnp.sum(w_out)[None]
+    if kernel:
+        acc = agg_ops.masked_agg_acc_pallas(
+            acc, base, flat_mask, sw_in, sw_out, block_n=block_n,
+            interpret=force_pallas_interpret)
+    else:
+        acc = agg_ops.masked_agg_acc_ref(acc, base, flat_mask, sw_in, sw_out)
+    if sp.indices is not None:
+        if kernel:
+            return agg_ops.masked_scatter_acc_pallas(
+                acc, sp.values, sp.scales, sp.indices, flat_mask, w_in,
+                w_out, quant_block=quant_block, block_n=block_n,
+                interpret=force_pallas_interpret)
+        return agg_ops.masked_scatter_acc_ref(
+            acc, sp.values, sp.scales, sp.indices, flat_mask, w_in, w_out,
+            quant_block=quant_block)
+    if sp.scales is not None:                  # dense int8 delta payload
+        if kernel:
+            return agg_ops.masked_agg_acc_deq_pallas(
+                acc, sp.values, sp.scales, flat_mask, w_in, w_out,
+                quant_block=quant_block, block_n=block_n,
+                interpret=force_pallas_interpret)
+        return agg_ops.masked_agg_acc_deq_ref(
+            acc, sp.values, sp.scales, flat_mask, w_in, w_out,
+            quant_block=quant_block)
+    vals = sp.values.astype(jnp.float32)       # dense bf16/f32 delta payload
+    if kernel:
+        return agg_ops.masked_agg_acc_pallas(
+            acc, vals, flat_mask, w_in, w_out, block_n=block_n,
+            interpret=force_pallas_interpret)
+    return agg_ops.masked_agg_acc_ref(acc, vals, flat_mask, w_in, w_out)
 
 
 def _fold_cv(cv_acc: jax.Array, cv_chunk: jax.Array, flat_mask: jax.Array,
@@ -610,6 +713,9 @@ def engine_attrs(engine, *, algorithm: str = None, block_n: int = None,
             "wire_quantized": bool(spec.wire.is_quantized),
             "wire_quant_block": int(spec.wire.quant_block)
             if spec.wire.is_quantized else 0,
+            "wire_topk_frac": float(spec.wire.topk_frac),
+            "wire_stochastic": bool(spec.wire.stochastic),
+            "wire_error_feedback": bool(spec.wire.error_feedback),
         })
     return attrs
 

@@ -159,9 +159,12 @@ class AsyncRoundEngine:
         self.n_versions = -(-self.lag // self.folds_per_round) + 1
         self._reset_versions()
         # per-client one-way wire cost: the trainer's numbers, not a
-        # recomputation — sync and async billing share one source
+        # recomputation — sync and async billing share one source (the
+        # upload direction carries the wire-v2 delta payload sizes)
         self._per_simple = trainer.per_simple_bytes
         self._per_complex = trainer.per_complex_bytes
+        self._per_simple_up = trainer.per_simple_bytes_up
+        self._per_complex_up = trainer.per_complex_bytes_up
         self.last_bytes_down = 0.0
         self.last_bytes_up = 0.0
         donate = (0, 1) if jax.default_backend() != "cpu" else ()
@@ -250,15 +253,24 @@ class AsyncRoundEngine:
                 lambda x: jax.lax.dynamic_index_in_dim(
                     x, idx, 0, keepdims=False), bcasts)
 
+        delta_mode = wire.uses_deltas
+        ef_on = fed.error_feedback
+        k_top_s, k_top_c = tr.k_top_simple, tr.k_top_complex
+
         def round_fn(versions, versions_host, data_s, data_c,
                      rng, flat_mask, idx_s, w_s, idx_c, w_c,
                      real_s=None, real_c=None,
-                     cv_global=None, cv_s=None, cv_c=None):
+                     cv_global=None, cv_s=None, cv_c=None,
+                     ef_s=None, ef_c=None):
             # real_s / real_c: super-cohort slot reality masks (uniform
             # sampling mode only — absent, the traced program is exactly
             # the pre-existing async round).  cv_global / cv_s / cv_c:
             # SCAFFOLD's server control variate and the cohort's gathered
             # store rows — the "none" trace takes none of them.
+            # ef_s / ef_c: gathered error-feedback residual rows (wire v2
+            # with error_feedback only).  Under lag > 0 the wire-v2 delta
+            # is measured vs the chunk's SELECTED STALE broadcast — the
+            # model the client really trained from.
             agg_init, agg_fold, agg_finalize = make_agg(flat_mask)
             rs, rc = jax.random.split(rng)
             bcasts_c = decode_versions(versions)
@@ -280,25 +292,32 @@ class AsyncRoundEngine:
                     layout=layout,
                     inv_k_lr=1.0 / (federated.local_step_count(data_c, fed)
                                     * fed.lr))
+            up_s = up_c = None
+            if delta_mode:
+                up_s = federated.WireUploadCtx(wire, layout, k_top_s, ef_s)
+                up_c = federated.WireUploadCtx(wire, layout, k_top_c, ef_c)
             state = agg_init(template)
-            state, loss_s, valid_s, rows_s = federated.stream_population(
+            (state, loss_s, valid_s, rows_s,
+             efrows_s) = federated.stream_population(
                 state, version_select(bcasts_s), train_simple, data_s, rs,
                 agg_fold, k=k_simple, chunk=self.chunk_s,
                 n_chunks=self.n_chunks_s, is_simple_flag=True,
                 skip_nan=fed.skip_nan_devices,
                 version_idx=idx_s, staleness_w=w_s, real_mask=real_s,
-                scaffold=sc_s)
-            state, loss_c, valid_c, rows_c = federated.stream_population(
+                scaffold=sc_s, upload=up_s)
+            (state, loss_c, valid_c, rows_c,
+             efrows_c) = federated.stream_population(
                 state, version_select(bcasts_c), train_complex, data_c, rc,
                 agg_fold, k=k_complex, chunk=self.chunk_c,
                 n_chunks=self.n_chunks_c, is_simple_flag=False,
                 skip_nan=fed.skip_nan_devices,
                 version_idx=idx_c, staleness_w=w_c, real_mask=real_c,
-                scaffold=sc_c)
+                scaffold=sc_c, upload=up_c)
             cv_out = None
             if scaffold_on:
                 cv_out = (cv_global + state.cv_acc / float(fed.n_devices),
                           rows_s, rows_c)
+            ef_out = (efrows_s, efrows_c) if ef_on else None
             new_complex, new_host = agg_finalize(state, template=template)
             # publish: roll the new round model into the version stack
             new_versions = jnp.concatenate(
@@ -312,7 +331,7 @@ class AsyncRoundEngine:
             metrics = {"loss_simple": loss_s, "loss_complex": loss_c,
                        "n_valid": valid_s + valid_c}
             return (new_complex, new_host, new_versions,
-                    new_versions_host, metrics, cv_out)
+                    new_versions_host, metrics, cv_out, ef_out)
 
         return round_fn
 
@@ -362,12 +381,15 @@ class AsyncRoundEngine:
                 key, tr._flat_mask_arg(), jnp.asarray(s_s, jnp.int32), w_s,
                 jnp.asarray(s_c, jnp.int32), w_c)
         cv = tr._cv_args(plan)
+        ef = tr._ef_args(plan)
         if tr.fed.sample_uniform:
             args += (jnp.asarray(plan.simple_real),
                      jnp.asarray(plan.complex_real))
-        elif cv:
+        elif cv or ef:
             args += (None, None)     # skip the real-mask slots positionally
-        return args + cv, (plan, s_s, s_c, r)
+        if ef and not cv:
+            cv = (None, None, None)  # skip the cv slots positionally
+        return args + cv + ef, (plan, s_s, s_c, r)
 
     def lower_round(self):
         """AOT-lower the async round jit with this trainer's shapes (the
@@ -403,9 +425,11 @@ class AsyncRoundEngine:
             with obs.span("sample_gather"):
                 args, (plan, s_s, s_c, r) = self._round_args()
             (new_complex, new_host, self.versions, self.versions_host,
-             metrics, cv_out) = self._dispatch(*args)
+             metrics, cv_out, ef_out) = self._dispatch(*args)
             if cv_out is not None:
                 tr._apply_cv_update(plan, cv_out)
+            if ef_out is not None:
+                tr._apply_ef_update(plan, ef_out)
             tr.client_state.record_round(plan.real_ids(), r)
             tr.server = federated.ServerState(
                 complex=new_complex, simple_host=new_host, round=r + 1)
@@ -416,9 +440,9 @@ class AsyncRoundEngine:
             # the trainer's honest-accounting numbers (0 when off)
             down += float(plan.n_real_simple * tr.per_simple_cv_bytes
                           + plan.n_real_complex * tr.per_complex_cv_bytes)
-            up = float(plan.n_real_simple * (self._per_simple
+            up = float(plan.n_real_simple * (self._per_simple_up
                                              + tr.per_simple_cv_bytes)
-                       + plan.n_real_complex * (self._per_complex
+                       + plan.n_real_complex * (self._per_complex_up
                                                 + tr.per_complex_cv_bytes))
             self.last_bytes_down, self.last_bytes_up = down, up
             tr.total_bytes_down += down

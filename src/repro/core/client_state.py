@@ -25,9 +25,9 @@ integer counters up to 2^53):
 * ``cv_scale``     — L2 norm of the client's SCAFFOLD control-variate
   row, written on every state-store scatter
   (:meth:`set_cv_scale`; zero when ``variance_reduction="none"``).
-* ``ef_scale``     — RESERVED slot for the wire-compression
-  error-feedback residual norm (ROADMAP item); zero until it lands,
-  but already checkpointed so the schema is forward-compatible.
+* ``ef_scale``     — L2 norm of the client's wire-compression
+  error-feedback residual row, written on every residual-store scatter
+  (:meth:`set_ef_scale`; zero when ``error_feedback=False``).
 
 **The sentinel row.**  The matrix has ``N + 1`` rows; row ``N`` is a
 scratch row that ids may legally point at when a caller wants a
@@ -58,6 +58,7 @@ _PART = COLUMNS.index("participation")
 _LAST = COLUMNS.index("last_round")
 _TAG = COLUMNS.index("version_tag")
 _CV = COLUMNS.index("cv_scale")
+_EF = COLUMNS.index("ef_scale")
 
 NEVER = -1.0          # version_tag / last_round value for "no history"
 
@@ -136,6 +137,14 @@ class ClientStateMatrix:
         row (core/state_store.py scatter path) — the per-client drift
         signal the participation telemetry reads.  O(cohort)."""
         self._m[np.asarray(ids, dtype=np.int64), _CV] = \
+            np.asarray(norms, dtype=np.float64)
+
+    def set_ef_scale(self, ids: np.ndarray, norms: np.ndarray) -> None:
+        """Record the L2 norm of each updated error-feedback residual
+        row (the wire-compression bookkeeping the ``ef_scale`` column
+        was reserved for) — how much compression error each client is
+        still carrying.  O(cohort)."""
+        self._m[np.asarray(ids, dtype=np.int64), _EF] = \
             np.asarray(norms, dtype=np.float64)
 
     def reset_version_tags(self) -> None:

@@ -53,6 +53,22 @@ the encoder's real output sizes (payload + scale sidecar, download and
 upload separately), replacing the old analytic estimate (kept as
 ``analytic_bytes_per_round`` — the consistency oracle).
 
+**Wire v2 (compressed uploads).**  When the wire ``uses_deltas``
+(``topk_frac < 1``, ``stochastic_rounding`` or ``error_feedback``),
+clients upload the encoded DELTA vs the decoded broadcast they trained
+on instead of full params: each chunk packs ``x`` (its broadcast) and
+``y`` (its trained result), encodes ``d = y - x`` — plus the client's
+gathered error-feedback residual row when EF is on, whose update
+``r' = (d + r) - decode(encode(d + r))`` keeps what the lossy encode
+dropped for the next participation — and the server folds
+``(sum_z w_z) * x`` densely plus every encoded delta row
+(``aggregate.SparseChunk``; top-k payloads through the scatter-fold
+kernel).  Residual rows live in a second ``FlatStateStore``
+(``FederatedTrainer.ef_store``, gathered/scattered per round exactly
+like SCAFFOLD's control variates; row norms feed the scalar matrix's
+``ef_scale`` column).  With every v2 knob at its default the upload
+path is the pre-existing program, bit for bit (test-pinned).
+
 **Async contract.**  With ``FedConfig.async_lag > 0`` the trainer
 delegates ``run_round`` to ``core/async_rounds.AsyncRoundEngine``: chunk
 ``t`` of a round trains on the version-tagged server params published at
@@ -179,6 +195,32 @@ class ScaffoldCtx(NamedTuple):
     inv_k_lr: float
 
 
+# fold_in tag deriving a client's wire-encode key from its training key:
+# the stochastic-rounding bit stream must be independent of the SGD
+# stream, and deriving from the same per-client base key keeps the
+# encode invariant to chunk placement (like the training RNG)
+_WIRE_KEY_TAG = 0x57495245          # "WIRE"
+
+
+class WireUploadCtx(NamedTuple):
+    """Per-population wire-v2 upload context threaded through one chunk
+    stream (delta-mode encode; active iff ``WireSpec.uses_deltas``).
+
+    ``spec``: the round's wire.  ``layout``: the trainer's FlatLayout
+    (packs the broadcast ``x`` and trained result ``y``; the upload is
+    the encoded delta ``y - x``).  ``k_top``: static top-k payload
+    length for this population — ``comm.topk_count`` of its TRUE
+    element count (simple clients' deltas are identically zero outside
+    M, so their budget is |M|).  ``ef_rows``: the cohort's gathered
+    ``(k, n_flat)`` error-feedback residuals
+    (``FlatStateStore.gather``); ``None`` when ``error_feedback`` is
+    off."""
+    spec: comm.WireSpec
+    layout: Any
+    k_top: int
+    ef_rows: Optional[jax.Array]
+
+
 # ---------------------------------------------------------------------------
 # The chunk-stream scan (shared by the sync round and the async engine)
 # ---------------------------------------------------------------------------
@@ -194,7 +236,8 @@ def stream_population(state, get_src, train_fn, data, key, agg_fold, *,
                       k: int, chunk: int, n_chunks: int,
                       is_simple_flag: bool, skip_nan: bool,
                       version_idx=None, staleness_w=None,
-                      real_mask=None, scaffold: Optional[ScaffoldCtx] = None):
+                      real_mask=None, scaffold: Optional[ScaffoldCtx] = None,
+                      upload: Optional[WireUploadCtx] = None):
     """Scan over one population's chunks: train + fold into running sums.
 
     The ONE chunk-stream implementation — the synchronous round and the
@@ -239,11 +282,25 @@ def stream_population(state, get_src, train_fn, data, key, agg_fold, *,
         their old row) as scan outputs.  ``None`` traces the literal
         pre-existing program — ``variance_reduction="none"`` stays
         bit-identical.
+      upload: optional :class:`WireUploadCtx` (wire v2).  When set, each
+        chunk uploads the encoded DELTA ``d = y - x`` vs the broadcast it
+        trained on instead of dense params: (a) the client's gathered EF
+        residual (if any) is added before the encode, (b) the encode is
+        top-k and/or stochastic per the spec (per-client encode keys are
+        ``fold_in(client_key, _WIRE_KEY_TAG)``), (c) the fold consumes an
+        :class:`aggregate.SparseChunk` — base ``x`` densely at the summed
+        weights plus each encoded delta row, so the dense uploads never
+        materialize — and (d) the new residuals
+        ``r' = (d + r) - decode(encoded)`` ride out as scan outputs
+        (invalid/NaN clients keep their old row).  ``None`` traces the
+        literal pre-existing upload path.
 
-    Returns: ``(state, mean_loss, n_valid, cv_rows)`` — ``cv_rows`` is
-    the ``(k, n_flat)`` updated control variates (``None`` without
-    ``scaffold``; pad rows are sliced off, but the HOST still must
-    scatter only real slots — pad slots wrap real clients' ids).
+    Returns: ``(state, mean_loss, n_valid, cv_rows, ef_rows)`` —
+    ``cv_rows`` is the ``(k, n_flat)`` updated control variates (``None``
+    without ``scaffold``), ``ef_rows`` the updated error-feedback
+    residuals (``None`` without EF).  Pad rows are sliced off both, but
+    the HOST still must scatter only real slots — pad slots wrap real
+    clients' ids.
     """
     k_pad = n_chunks * chunk
     wrap = jnp.arange(k_pad) % k
@@ -268,6 +325,14 @@ def stream_population(state, get_src, train_fn, data, key, agg_fold, *,
         if k_pad != k:
             rows = jnp.take(rows, wrap, axis=0)
         xs = xs + (to_chunks(rows),)
+    cv_pos = len(xs) - 1
+    ef_on = upload is not None and upload.ef_rows is not None
+    if ef_on:
+        ef = upload.ef_rows
+        if k_pad != k:
+            ef = jnp.take(ef, wrap, axis=0)
+        xs = xs + (to_chunks(ef),)
+    ef_pos = len(xs) - 1
     is_simple = jnp.full((chunk,), is_simple_flag)
 
     def tile(tree):
@@ -292,7 +357,7 @@ def stream_population(state, get_src, train_fn, data, key, agg_fold, *,
             trained, losses = jax.vmap(train_fn)(
                 tile(src), data_i, keys_i)
         else:
-            cv_i = xs[-1]
+            cv_i = xs[cv_pos]
             corr = _mask_pop(scaffold.c_global[None] - cv_i)
             trained, losses = jax.vmap(train_fn)(
                 tile(src), data_i, keys_i, corr)
@@ -301,33 +366,76 @@ def stream_population(state, get_src, train_fn, data, key, agg_fold, *,
             valid = valid & jax.vmap(masking.tree_isfinite)(trained)
         fold_valid = (valid.astype(jnp.float32) * w_i if is_async
                       else valid)
-        if scaffold is None:
-            state = agg_fold(state, trained, is_simple, fold_valid)
-            rows_out = None
-        else:
-            # option II: dc = (x - y)/(K*lr) - c on the trained slice;
-            # x is the decoded broadcast this chunk trained on (async:
-            # its selected stale version), y the trained result
-            x_flat = flatten.pack(scaffold.layout, src)
-            y_flat = flatten.pack_stacked(scaffold.layout, trained)
+        # x is the decoded broadcast this chunk trained on (async: its
+        # selected stale version), y the trained result — shared by the
+        # SCAFFOLD delta and the wire-v2 delta encode
+        x_flat = y_flat = None
+        if scaffold is not None or upload is not None:
+            pack_layout = (scaffold.layout if scaffold is not None
+                           else upload.layout)
+            x_flat = flatten.pack(pack_layout, src)
+            y_flat = flatten.pack_stacked(pack_layout, trained)
+        rows_out = ef_out = None
+        fold_kw = {}
+        if scaffold is not None:
+            # option II: dc = (x - y)/(K*lr) - c on the trained slice
             dc = _mask_pop((x_flat[None] - y_flat) * scaffold.inv_k_lr
                            - scaffold.c_global[None])
-            state = agg_fold(state, trained, is_simple, fold_valid,
-                             cv_chunk=dc)
+            fold_kw["cv_chunk"] = dc
             # NaN clients fold at weight 0 (dc gated in the kernel) AND
             # keep their previous row — a NaN row must never persist
             rows_out = jnp.where(valid[:, None], cv_i + dc, cv_i)
+        if upload is None:
+            state = agg_fold(state, trained, is_simple, fold_valid,
+                             **fold_kw)
+        else:
+            spec_w = upload.spec
+            d = (y_flat.astype(jnp.float32)
+                 - x_flat.astype(jnp.float32)[None])
+            ef_i = xs[ef_pos] if ef_on else None
+            d_in = d + ef_i if ef_on else d
+            enc_keys = jax.vmap(
+                lambda kk: jax.random.fold_in(kk, _WIRE_KEY_TAG))(keys_i)
+            if spec_w.is_sparse:
+                buf = jax.vmap(lambda v, kk: comm.sparse_encode(
+                    spec_w, v, upload.k_top, key=kk))(d_in, enc_keys)
+                sp = aggregate.SparseChunk(x_flat.astype(jnp.float32),
+                                           buf.payload, buf.scales,
+                                           buf.indices)
+                if ef_on:
+                    dec = jax.vmap(lambda b: comm.sparse_decode_values(
+                        spec_w, b))(buf)
+                    r_new = jax.vmap(
+                        lambda v, ix, dv: v.at[ix].add(-dv))(
+                            d_in, buf.indices, dec)
+            else:
+                buf = jax.vmap(lambda v, kk: comm.encode(
+                    spec_w, v, key=kk))(d_in, enc_keys)
+                sp = aggregate.SparseChunk(x_flat.astype(jnp.float32),
+                                           buf.payload, buf.scales, None)
+                if ef_on:
+                    r_new = d_in - jax.vmap(
+                        lambda b: comm.decode(spec_w, b))(buf)
+            if ef_on:
+                # r' = (d + r) - decode(encode(d + r)); NaN clients keep
+                # their residual row, like cv rows
+                ef_out = jnp.where(valid[:, None], r_new, ef_i)
+            state = agg_fold(state, None, is_simple, fold_valid,
+                             sparse_chunk=sp, **fold_kw)
         loss_sum = loss_sum + jnp.sum(jnp.where(real_i, losses, 0.0))
         valid_sum = valid_sum + jnp.sum(valid)
-        return (state, loss_sum, valid_sum), rows_out
+        return (state, loss_sum, valid_sum), (rows_out, ef_out)
 
     zero = jnp.zeros((), jnp.float32)
     (state, loss_sum, valid_sum), ys = jax.lax.scan(
         fold_chunk, (state, zero, zero), xs)
-    cv_rows = None
+    rows_ys, ef_ys = ys
+    cv_rows = ef_rows = None
     if scaffold is not None:
-        cv_rows = ys.reshape(k_pad, -1)[:k]
-    return state, loss_sum / denom, valid_sum, cv_rows
+        cv_rows = rows_ys.reshape(k_pad, -1)[:k]
+    if ef_on:
+        ef_rows = ef_ys.reshape(k_pad, -1)[:k]
+    return state, loss_sum / denom, valid_sum, cv_rows, ef_rows
 
 
 # ---------------------------------------------------------------------------
@@ -478,7 +586,10 @@ class FederatedTrainer:
         # communication wire format (core/comm.py): the broadcast is
         # decoded from it on clients, uploads are folded through it, and
         # the byte accounting below measures its real encoded sizes
-        self.wire = comm.WireSpec(fed.comm_dtype, fed.quant_block)
+        self.wire = comm.WireSpec(fed.comm_dtype, fed.quant_block,
+                                  topk_frac=fed.topk_frac,
+                                  stochastic=fed.stochastic_rounding,
+                                  error_feedback=fed.error_feedback)
         # THE engine configuration: one frozen spec built from the config,
         # bound with the trace-time flat_mask inside the round fn
         self.engine_spec = aggregate.EngineSpec.from_config(
@@ -494,6 +605,22 @@ class FederatedTrainer:
                 fed.n_devices, self.layout.n_flat,
                 backend=fed.state_store_backend)
             self.cv_global = jnp.zeros((self.layout.n_flat,), jnp.float32)
+        # wire-v2 error-feedback residuals: the second FlatStateStore
+        # consumer — one packed row per client accumulating what the
+        # lossy upload encode dropped, re-uploaded next participation
+        self.ef_store: Optional[state_store.FlatStateStore] = None
+        if fed.error_feedback:
+            self.ef_store = state_store.FlatStateStore(
+                fed.n_devices, self.layout.n_flat,
+                backend=fed.state_store_backend)
+        # static top-k payload lengths, per population (simple clients'
+        # deltas are identically zero outside M, so their k budgets |M|)
+        self.k_top_simple = self.k_top_complex = 0
+        if self.wire.uses_deltas:
+            n_m = int(np.sum(np.asarray(self.flat_mask)))
+            self.k_top_simple = comm.topk_count(self.wire, n_m)
+            self.k_top_complex = comm.topk_count(self.wire,
+                                                 self.layout.n_params)
         self.cohort_chunk = self._resolve_cohort_chunk()
         (self.bytes_down_per_round,
          self.bytes_up_per_round) = self._measured_comm_bytes()
@@ -574,15 +701,27 @@ class FederatedTrainer:
         self.per_complex_bytes = comm.wire_bytes(self.wire,
                                                  self.layout.n_params)
         self.per_simple_bytes = comm.wire_bytes(self.wire, n_m)
+        # the upload direction carries the wire-v2 delta payload: under
+        # top-k it is the compacted index+value buffer, measured from the
+        # encoder's real output shapes like the dense path (identical to
+        # the download numbers when no v2 knob is on)
+        self.per_complex_bytes_up = comm.wire_bytes_up(self.wire,
+                                                       self.layout.n_params)
+        self.per_simple_bytes_up = comm.wire_bytes_up(self.wire, n_m)
         cv = self.cv_store is not None
         self.per_simple_cv_bytes = 4.0 * n_m if cv else 0.0
         self.per_complex_cv_bytes = 4.0 * self.layout.n_params if cv else 0.0
-        one_way = float(
+        down = float(
             self.k_simple * (self.per_simple_bytes
                              + self.per_simple_cv_bytes)
             + self.k_complex * (self.per_complex_bytes
                                 + self.per_complex_cv_bytes))
-        return one_way, one_way
+        up = float(
+            self.k_simple * (self.per_simple_bytes_up
+                             + self.per_simple_cv_bytes)
+            + self.k_complex * (self.per_complex_bytes_up
+                                + self.per_complex_cv_bytes))
+        return down, up
 
     def _round_bytes(self, plan: sampling.CohortPlan) -> Tuple[float, float]:
         """(download, upload) bytes of ONE round under ``plan``.  With
@@ -591,12 +730,17 @@ class FederatedTrainer:
         only the realized clients — a pad slot moves no bytes."""
         if plan.all_real:
             return self.bytes_down_per_round, self.bytes_up_per_round
-        one_way = float(
+        down = float(
             plan.n_real_simple * (self.per_simple_bytes
                                   + self.per_simple_cv_bytes)
             + plan.n_real_complex * (self.per_complex_bytes
                                      + self.per_complex_cv_bytes))
-        return one_way, one_way
+        up = float(
+            plan.n_real_simple * (self.per_simple_bytes_up
+                                  + self.per_simple_cv_bytes)
+            + plan.n_real_complex * (self.per_complex_bytes_up
+                                     + self.per_complex_cv_bytes))
+        return down, up
 
     def analytic_bytes_per_round(self) -> float:
         """The pre-wire estimate (param counts x param itemsize, down+up)
@@ -646,6 +790,11 @@ class FederatedTrainer:
                 "state_store_backend": self.cv_store.backend,
                 "state_store_bytes": self.cv_store.nbytes,
             })
+        if self.ef_store is not None:
+            values.update({
+                "ef_store_backend": self.ef_store.backend,
+                "ef_store_bytes": self.ef_store.nbytes,
+            })
         values.update(aggregate.engine_attrs(self.engine_spec))
         self.obs.ledger("run_config", values)
 
@@ -692,6 +841,12 @@ class FederatedTrainer:
                 "cum_gathered_bytes": self.cv_store.gathered_bytes,
                 "cum_scattered_bytes": self.cv_store.scattered_bytes,
             })
+        if self.ef_store is not None:
+            obs.ledger("ef_store", {
+                "store_bytes": self.ef_store.nbytes,
+                "cum_gathered_bytes": self.ef_store.gathered_bytes,
+                "cum_scattered_bytes": self.ef_store.scattered_bytes,
+            })
         obs.ledger("participation_hist",
                    self.client_state.participation_histogram())
 
@@ -725,6 +880,10 @@ class FederatedTrainer:
         chunk_c, n_chunks_c = chunk_geometry(self.k_complex,
                                              self.cohort_chunk)
 
+        delta_mode = wire.uses_deltas
+        ef_on = fed.error_feedback
+        k_top_s, k_top_c = self.k_top_simple, self.k_top_complex
+
         def round_fn(complex_params: Tree, simple_host: Optional[Tree],
                      data_s: Batch, data_c: Batch, rng: jax.Array,
                      flat_mask: Optional[jax.Array],
@@ -732,13 +891,17 @@ class FederatedTrainer:
                      real_c: Optional[jax.Array] = None,
                      cv_global: Optional[jax.Array] = None,
                      cv_s: Optional[jax.Array] = None,
-                     cv_c: Optional[jax.Array] = None):
+                     cv_c: Optional[jax.Array] = None,
+                     ef_s: Optional[jax.Array] = None,
+                     ef_c: Optional[jax.Array] = None):
             # real_s / real_c: per-slot reality masks (uniform
             # super-cohort mode only — stratified rounds never pass them,
             # keeping the traced program literally the pre-existing one).
             # cv_global / cv_s / cv_c: SCAFFOLD's server control variate
             # and the cohort's gathered store rows (scaffold only — the
             # "none" trace takes none of them and stays bit-identical).
+            # ef_s / ef_c: the cohort's gathered error-feedback residual
+            # rows (wire v2 with error_feedback only — same discipline).
             agg_init, agg_fold, agg_finalize = make_agg(flat_mask)
             rs, rc = jax.random.split(rng)
             # the server -> client broadcast crosses the wire: clients
@@ -764,19 +927,23 @@ class FederatedTrainer:
                     layout=layout,
                     inv_k_lr=1.0 / (local_step_count(data_c, fed)
                                     * fed.lr))
+            up_s = up_c = None
+            if delta_mode:
+                up_s = WireUploadCtx(wire, layout, k_top_s, ef_s)
+                up_c = WireUploadCtx(wire, layout, k_top_c, ef_c)
             state = agg_init(complex_params)
-            state, loss_s, valid_s, rows_s = stream_population(
+            state, loss_s, valid_s, rows_s, efrows_s = stream_population(
                 state, lambda _: src_simple, train_simple, data_s, rs,
                 agg_fold, k=self.k_simple, chunk=chunk_s,
                 n_chunks=n_chunks_s, is_simple_flag=True,
                 skip_nan=fed.skip_nan_devices, real_mask=real_s,
-                scaffold=sc_s)
-            state, loss_c, valid_c, rows_c = stream_population(
+                scaffold=sc_s, upload=up_s)
+            state, loss_c, valid_c, rows_c, efrows_c = stream_population(
                 state, lambda _: bc_complex, train_complex, data_c, rc,
                 agg_fold, k=self.k_complex, chunk=chunk_c,
                 n_chunks=n_chunks_c, is_simple_flag=False,
                 skip_nan=fed.skip_nan_devices, real_mask=real_c,
-                scaffold=sc_c)
+                scaffold=sc_c, upload=up_c)
             cv_out = None
             if scaffold_on:
                 # server control variate: c += (1/N) * sum_i dc_i — the
@@ -786,12 +953,13 @@ class FederatedTrainer:
                 new_cv_global = (cv_global
                                  + state.cv_acc / float(fed.n_devices))
                 cv_out = (new_cv_global, rows_s, rows_c)
+            ef_out = (efrows_s, efrows_c) if ef_on else None
             new_complex, new_simple_host = agg_finalize(
                 state, template=complex_params)
             metrics = {"loss_simple": loss_s,
                        "loss_complex": loss_c,
                        "n_valid": valid_s + valid_c}
-            return new_complex, new_simple_host, metrics, cv_out
+            return new_complex, new_simple_host, metrics, cv_out, ef_out
 
         return round_fn
 
@@ -835,17 +1003,29 @@ class FederatedTrainer:
                 self.cv_store.gather(plan.simple_ids),
                 self.cv_store.gather(plan.complex_ids))
 
+    def _ef_args(self, plan: sampling.CohortPlan) -> tuple:
+        """The error-feedback round arguments: ``(rows_s, rows_c)``
+        residuals gathered O(cohort) from the EF store — empty when off
+        (the traced round then literally has no ef inputs)."""
+        if self.ef_store is None:
+            return ()
+        return (self.ef_store.gather(plan.simple_ids),
+                self.ef_store.gather(plan.complex_ids))
+
     def _round_args(self, plan: sampling.CohortPlan, data_s: Batch,
                     data_c: Batch, key: jax.Array) -> tuple:
         args = (self.server.complex, self.server.simple_host, data_s,
                 data_c, key, self._flat_mask_arg())
         cv = self._cv_args(plan)
+        ef = self._ef_args(plan)
         if self.fed.sample_uniform:
             args += (jnp.asarray(plan.simple_real),
                      jnp.asarray(plan.complex_real))
-        elif cv:
+        elif cv or ef:
             args += (None, None)     # skip the real-mask slots positionally
-        return args + cv
+        if ef and not cv:
+            cv = (None, None, None)  # skip the cv slots positionally
+        return args + cv + ef
 
     def _apply_cv_update(self, plan: sampling.CohortPlan, cv_out) -> None:
         """Commit one round's SCAFFOLD outputs: the new server control
@@ -866,6 +1046,25 @@ class FederatedTrainer:
             rows = np.asarray(rows)[real]
             self.cv_store.scatter(ids, rows)
             self.client_state.set_cv_scale(
+                ids, np.linalg.norm(rows.astype(np.float64), axis=1))
+
+    def _apply_ef_update(self, plan: sampling.CohortPlan, ef_out) -> None:
+        """Commit one round's error-feedback residuals: updated rows
+        scattered back for REAL slots only (the same pad-slot rule as
+        ``_apply_cv_update`` — pad slots wrap real clients' ids), row
+        norms tracked in the scalar matrix's ``ef_scale`` column
+        (telemetry: how much compression error each client carries)."""
+        rows_s, rows_c = ef_out
+        for ids, real, rows in (
+                (plan.simple_ids, plan.simple_real, rows_s),
+                (plan.complex_ids, plan.complex_real, rows_c)):
+            real = np.asarray(real, bool)
+            if not real.any():
+                continue
+            ids = np.asarray(ids, np.int64)[real]
+            rows = np.asarray(rows)[real]
+            self.ef_store.scatter(ids, rows)
+            self.client_state.set_ef_scale(
                 ids, np.linalg.norm(rows.astype(np.float64), axis=1))
 
     def lower_round(self):
@@ -897,9 +1096,11 @@ class FederatedTrainer:
                 self.fed.seed * 100003 + self.server.round)
             args = self._round_args(plan, data_s, data_c, key)
             (new_complex, new_simple_host, metrics,
-             cv_out) = self._dispatch(*args)
+             cv_out, ef_out) = self._dispatch(*args)
             if cv_out is not None:
                 self._apply_cv_update(plan, cv_out)
+            if ef_out is not None:
+                self._apply_ef_update(plan, ef_out)
             self.client_state.record_round(plan.real_ids(),
                                            plan.round_index)
             self.server = ServerState(complex=new_complex,

@@ -3,8 +3,9 @@
 ``ClientStateMatrix`` (client_state.py) holds per-client *scalars*; this
 module holds per-client *vectors* — one packed ``FlatLayout`` row per
 client, the shape SCAFFOLD control variates, error-feedback residuals
-and per-client momenta all share.  The contract mirrors the scalar
-matrix's round-jit seam exactly:
+and per-client momenta all share (``FederatedTrainer.cv_store`` and
+``FederatedTrainer.ef_store`` are both instances of this class).  The
+contract mirrors the scalar matrix's round-jit seam exactly:
 
 * ``gather(ids)`` hands the round jit the O(cohort) ``(k, n_flat)``
   block of sampled rows (a device array, ready to chunk through the
@@ -35,7 +36,8 @@ records the footprint + gather/scatter overhead).
 Pad slots: cohort plans may pad slot blocks with *wrapped real ids* at
 weight 0 — callers must mask those out before ``scatter`` (write only
 ``plan.*_real`` slots) or a pad slot would clobber the real client's
-row it wraps.  ``FederatedTrainer._apply_cv_update`` does exactly this.
+row it wraps.  ``FederatedTrainer._apply_cv_update`` and
+``_apply_ef_update`` do exactly this.
 """
 
 from __future__ import annotations

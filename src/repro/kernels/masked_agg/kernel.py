@@ -12,7 +12,7 @@ cohort through VMEM exactly once with lane-aligned tiles:
   reduced over Z in one fused multiply-add in f32, written back in the
   storage dtype.
 
-Three variants:
+Four variants:
 
 * ``masked_agg_pallas`` — the one-shot reduction (out = masked sum).
 * ``masked_agg_acc_pallas`` — the streaming fold's accumulating form:
@@ -27,6 +27,18 @@ Three variants:
   cut the fold's HBM read traffic 4x vs f32.  ``quant_block`` must divide
   ``block_n`` so scale groups tile with the grid; the dequant reshape
   keeps the 128-lane axis intact ((Z, block_n) -> (Z, groups, 128-mult)).
+* ``masked_scatter_acc_pallas`` — the top-k sparse-upload fold (wire v2):
+  each client ships ``k`` compacted values (+ scale sidecar over the
+  compacted payload) and their int32 flat positions; the kernel
+  dequantizes the compacted payload tile-locally and scatters it into
+  the accumulator block by block.  TPU has no dynamic lane scatter, so
+  the scatter is a one-hot contraction: per grid block the kept indices
+  are compared against the block's position range
+  (``broadcasted_iota``) and the values matmul through the resulting
+  one-hot — the (k_tile, block_n) one-hot lives only in VMEM, and the
+  dense ``(Z, n_flat)`` f32 cohort copy never materializes anywhere.
+  The k axis is chunked at ``k_tile`` to bound the one-hot's VMEM
+  footprint (512 x 2048 f32 = 4 MiB).
 
 Neither wrapper is ``jax.jit``-ed: both always run inside the already
 jitted round (or a jitted test harness), where an extra jit would only add
@@ -195,4 +207,100 @@ def masked_agg_acc_deq_pallas(acc: jax.Array, q: jax.Array,
         input_output_aliases={0: 0},
         interpret=interpret,
     )(acc[None, :], q, scales, mask[None, :], w_m[:, None], w_rest[:, None])
+    return out[0, :n]
+
+
+# one-hot scatter contraction tile along the compacted-k axis: bounds the
+# (k_tile, block_n) one-hot to 512 x 2048 f32 = 4 MiB of VMEM
+_SCATTER_K_TILE = 512
+
+
+def _make_scatter_acc_kernel(quant_block: int, block_n: int, k_tile: int):
+    def kernel(acc_ref, v_ref, s_ref, idx_ref, mask_ref, wm_ref, wr_ref,
+               out_ref):
+        i = pl.program_id(0)
+        z, k = v_ref.shape
+        g = v_ref[...].astype(jnp.float32).reshape(z, k // quant_block,
+                                                   quant_block)
+        v = (g * s_ref[...][..., None]).reshape(z, k)   # fused dequant
+        wm = wm_ref[...].astype(jnp.float32)            # (Z, 1)
+        wr = wr_ref[...].astype(jnp.float32)            # (Z, 1)
+        # NaN-device gating BEFORE the contraction: a poisoned row would
+        # spread NaN over the whole block through the matmul's 0-terms
+        v = jnp.where((wm > 0) | (wr > 0), v, 0.0)
+        rel = idx_ref[...] - i * block_n                # (Z, k) int32
+        mask = mask_ref[...]                            # (1, block_n)
+        total = jnp.zeros((1, block_n), jnp.float32)
+        for row in range(z):
+            w_l = jnp.where(mask, wm[row, 0], wr[row, 0])   # (1, block_n)
+            scat = jnp.zeros((block_n,), jnp.float32)
+            for j0 in range(0, k, k_tile):
+                j1 = min(j0 + k_tile, k)
+                cols = jax.lax.broadcasted_iota(jnp.int32,
+                                                (j1 - j0, block_n), 1)
+                onehot = (rel[row, j0:j1, None] == cols).astype(jnp.float32)
+                scat = scat + v[row, j0:j1] @ onehot
+            total = total + jnp.where(w_l > 0, scat[None, :], 0.0) * w_l
+        out_ref[...] = acc_ref[...] + total
+    return kernel
+
+
+def masked_scatter_acc_pallas(acc: jax.Array, values: jax.Array,
+                              scales, indices: jax.Array,
+                              mask: jax.Array, w_m: jax.Array,
+                              w_rest: jax.Array, *, quant_block: int,
+                              block_n: int = 2048,
+                              interpret: bool = False) -> jax.Array:
+    """Sparse scatter-fold: acc (N,) f32 += masked scatter of each
+    client's compacted payload values (Z, k) x per-group scales
+    (Z, k/quant_block) at flat positions indices (Z, k) int32.
+
+    ``acc`` is aliased to the output (in-place update).  ``values`` may
+    be int8/bf16/f32; ``scales=None`` means no sidecar (a ones sidecar is
+    synthesized so one kernel body serves every wire dtype).  ``k`` must
+    be a ``quant_block`` multiple (``comm.topk_count`` rounds up to a
+    lane multiple, which any valid ``quant_block`` divides).  Per-row
+    indices must be distinct (``top_k`` guarantees it) and inside
+    ``[0, N)``; the weight at each target position is selected by the
+    mask there (w_m inside M, w_rest outside), zero weights gate the
+    value, and a row with both weights zero (NaN/padding device) is
+    zeroed before the contraction.
+    """
+    if acc.dtype != jnp.float32:
+        raise ValueError(f"accumulator must be f32, got {acc.dtype}")
+    z, k = values.shape
+    if k % quant_block:
+        raise ValueError(f"k={k} not a multiple of "
+                         f"quant_block={quant_block}")
+    if indices.shape != (z, k):
+        raise ValueError(f"indices shape {indices.shape} != {(z, k)}")
+    if scales is None:
+        scales = jnp.ones((z, k // quant_block), jnp.float32)
+    n = acc.shape[0]
+    pad = (-n) % block_n
+    if pad:
+        acc = jnp.pad(acc, (0, pad))
+        mask = jnp.pad(mask, (0, pad))
+    np_ = acc.shape[0]
+    grid = (np_ // block_n,)
+
+    out = pl.pallas_call(
+        _make_scatter_acc_kernel(quant_block, block_n,
+                                 min(k, _SCATTER_K_TILE)),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_n), lambda i: (0, i)),
+            pl.BlockSpec((z, k), lambda i: (0, 0)),
+            pl.BlockSpec((z, k // quant_block), lambda i: (0, 0)),
+            pl.BlockSpec((z, k), lambda i: (0, 0)),
+            pl.BlockSpec((1, block_n), lambda i: (0, i)),
+            pl.BlockSpec((z, 1), lambda i: (0, 0)),
+            pl.BlockSpec((z, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_n), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, np_), jnp.float32),
+        input_output_aliases={0: 0},
+        interpret=interpret,
+    )(acc[None, :], values, scales, indices.astype(jnp.int32),
+      mask[None, :], w_m[:, None], w_rest[:, None])
     return out[0, :n]

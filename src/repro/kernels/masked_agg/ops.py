@@ -30,10 +30,12 @@ import jax.numpy as jnp
 
 from repro.kernels.masked_agg.kernel import (masked_agg_acc_deq_pallas,
                                              masked_agg_acc_pallas,
-                                             masked_agg_pallas)
+                                             masked_agg_pallas,
+                                             masked_scatter_acc_pallas)
 from repro.kernels.masked_agg.ref import (masked_agg_acc_deq_ref,
                                           masked_agg_acc_ref,
-                                          masked_agg_ref)
+                                          masked_agg_ref,
+                                          masked_scatter_acc_ref)
 
 Tree = Any
 

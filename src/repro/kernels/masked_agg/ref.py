@@ -70,3 +70,35 @@ def masked_agg_acc_deq_ref(acc: jnp.ndarray, q: jnp.ndarray,
         xz = jnp.where(wz > 0, xz, 0.0)
         out = out + xz * wz
     return out
+
+
+def masked_scatter_acc_ref(acc: jnp.ndarray, values: jnp.ndarray,
+                           scales, indices: jnp.ndarray,
+                           mask: jnp.ndarray, w_m: jnp.ndarray,
+                           w_rest: jnp.ndarray, *,
+                           quant_block: int) -> jnp.ndarray:
+    """Sparse scatter-fold (oracle for ``masked_scatter_acc_pallas``):
+    acc (N,) f32 += each client's compacted payload values (Z, k) x
+    per-group scales (Z, k/quant_block) scattered at flat positions
+    indices (Z, k) int32.
+
+    Row-streamed like the dense accumulating refs: one XLA scatter-add
+    per client over the compacted ``(k,)`` values — the dense ``(Z, N)``
+    f32 cohort copy never materializes.  The weight at each target
+    position is ``mask[idx] ? w_m[z] : w_rest[z]``; zero weights gate
+    the value before the add (NaN-device contract), and a row whose
+    weights are both zero is dropped entirely.  ``scales=None`` skips
+    the dequant (bf16/f32 payloads)."""
+    z, k = values.shape
+    out = acc
+    for row in range(z):
+        v = values[row].astype(jnp.float32)
+        if scales is not None:
+            v = v * jnp.repeat(scales[row], quant_block,
+                               total_repeat_length=k)
+        v = jnp.where((w_m[row] > 0) | (w_rest[row] > 0), v, 0.0)
+        w_at = jnp.where(jnp.take(mask, indices[row]), w_m[row],
+                         w_rest[row]).astype(jnp.float32)
+        v = jnp.where(w_at > 0, v, 0.0) * w_at
+        out = out.at[indices[row]].add(v)
+    return out

@@ -48,6 +48,9 @@ def build_trainer(args, telemetry=None) -> tuple:
         agg_stream_dtype=args.agg_stream_dtype,
         agg_memory_budget_mb=args.agg_memory_budget_mb,
         comm_dtype=args.comm_dtype, quant_block=args.quant_block,
+        topk_frac=args.topk_frac,
+        stochastic_rounding=args.stochastic_rounding,
+        error_feedback=args.error_feedback,
         async_lag=args.async_lag, async_staleness=args.staleness,
         async_decay=args.staleness_decay,
         variance_reduction=args.variance_reduction,
@@ -133,6 +136,26 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--quant-block", type=int, default=128,
                     help="int8 wire scale-group size (elements per f32 "
                          "scale; must divide 128)")
+    ap.add_argument("--topk-frac", type=float, default=1.0,
+                    help="upload sparsification: each client uploads only "
+                         "the top-k largest-|x| entries of its DELTA "
+                         "against the broadcast it trained on (k = frac * "
+                         "population size, rounded up to a lane multiple), "
+                         "as index+value payloads; 1.0 = dense uploads "
+                         "(the pre-existing wire, bit-identical)")
+    ap.add_argument("--stochastic-rounding", action="store_true",
+                    help="unbiased stochastic rounding on lossy upload "
+                         "encodes (int8/bf16): E[decode(encode(x))] = x, "
+                         "seeded per client per round (bit-reproducible); "
+                         "broadcasts stay round-to-nearest")
+    ap.add_argument("--error-feedback", action="store_true",
+                    help="per-client error-feedback residuals: the wire "
+                         "compression error of each upload is remembered "
+                         "in a flat state-store row and added to the next "
+                         "upload's delta, so compression error accumulates "
+                         "into the average instead of being lost; requires "
+                         "a lossy upload path (bf16/int8 wire or "
+                         "--topk-frac < 1)")
     ap.add_argument("--async-lag", type=int, default=0,
                     help="bounded broadcast staleness in chunk folds: "
                          "chunk i of a round trains on the server version "
@@ -216,7 +239,7 @@ def main(argv=None):
             f"staleness/chunk={list(map(int, steady[0]))} + "
             f"{list(map(int, steady[1]))} "
             f"(weights {args.staleness}, a={args.staleness_decay})")
-    if args.comm_dtype != "float32":
+    if args.comm_dtype != "float32" or trainer.wire.uses_deltas:
         say(f"comm wire {args.comm_dtype}: "
             f"{trainer.bytes_per_round / 1e6:.3f} MB/round measured "
             f"(down {trainer.bytes_down_per_round / 1e6:.3f} + up "

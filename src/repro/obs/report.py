@@ -106,6 +106,7 @@ def summarize(events: List[Dict[str, Any]],
     # the per-round staleness histograms which sum)
     part_hists = ledger_values("participation_hist")
     states = ledger_values("client_state")
+    ef_stores = ledger_values("ef_store")
     health = {
         "nan_excluded_devices": counter_total("nan_excluded_devices"),
         "padding_weight0_clients": counter_total("padding_weight0_clients"),
@@ -116,6 +117,9 @@ def summarize(events: List[Dict[str, Any]],
         "participation_hist": part_hists[-1] if part_hists else {},
         "client_state_bytes": (states[-1].get("state_bytes")
                                if states else None),
+        # error-feedback residual store (last ledger wins — the byte
+        # counters are cumulative over the run, like client_state)
+        "ef_store": ef_stores[-1] if ef_stores else {},
     }
 
     # -- progress / rounds-to-target ----------------------------------------
@@ -228,6 +232,11 @@ def render(summary: Dict[str, Any]) -> str:
         add(f"  participation histogram: {hist}")
     if h.get("client_state_bytes") is not None:
         add(f"  client-state matrix: {_fmt_bytes(h['client_state_bytes'])}")
+    ef = h.get("ef_store") or {}
+    if ef:
+        add(f"  error-feedback store: {_fmt_bytes(ef.get('store_bytes'))} "
+            f"(gathered {_fmt_bytes(ef.get('cum_gathered_bytes'))}, "
+            f"scattered {_fmt_bytes(ef.get('cum_scattered_bytes'))})")
 
     p = summary["progress"]
     if p["trajectory"]:

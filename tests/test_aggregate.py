@@ -465,7 +465,8 @@ def test_engine_attrs_records_the_full_spec():
         "agg_engine": "flat", "algorithm": "fedhen", "agg_block_n": 512,
         "agg_stream_dtype": "float32", "variance_reduction": "scaffold",
         "wire_dtype": "int8", "wire_quantized": True,
-        "wire_quant_block": 128,
+        "wire_quant_block": 128, "wire_topk_frac": 1.0,
+        "wire_stochastic": False, "wire_error_feedback": False,
     }
 
 

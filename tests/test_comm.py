@@ -343,6 +343,219 @@ def test_total_bytes_accumulate_per_direction():
                                          + ev["mbytes_up"])
 
 
+# ---------------------------------------------------------------------------
+# Wire v2: validation, stochastic rounding, top-k codec, upload accounting
+# ---------------------------------------------------------------------------
+
+def test_wire_spec_v2_validation():
+    for bad in (0.0, -0.5, 1.5):
+        with pytest.raises(ValueError, match="topk_frac must be in"):
+            comm.WireSpec("float32", topk_frac=bad)
+    with pytest.raises(ValueError, match="stochastic rounding requires"):
+        comm.WireSpec("float32", stochastic=True)
+    with pytest.raises(ValueError, match="error_feedback requires"):
+        comm.WireSpec("float32", error_feedback=True)
+    # lossy paths make all three legal
+    comm.WireSpec("int8", stochastic=True, error_feedback=True)
+    comm.WireSpec("bfloat16", stochastic=True)
+    comm.WireSpec("float32", topk_frac=0.5, error_feedback=True)
+
+
+def test_uses_deltas_gate():
+    """uses_deltas is THE switch that moves uploads off the pre-existing
+    traced program — every pre-v2 config must keep it False."""
+    for dtype in ("float32", "bfloat16", "int8"):
+        assert not comm.WireSpec(dtype).uses_deltas
+    assert comm.WireSpec("float32", topk_frac=0.25).uses_deltas
+    assert comm.WireSpec("int8", stochastic=True).uses_deltas
+    assert comm.WireSpec("int8", error_feedback=True).uses_deltas
+
+
+def test_fedconfig_delta_mode_requires_flat_engine():
+    with pytest.raises(ValueError, match="require.*agg_engine='flat'"):
+        FedConfig(topk_frac=0.5, agg_engine="tree")
+    with pytest.raises(ValueError, match="require.*agg_engine='flat'"):
+        FedConfig(comm_dtype="bfloat16", stochastic_rounding=True,
+                  agg_engine="tree")
+    FedConfig(topk_frac=0.5)            # flat default: fine
+
+
+def test_stochastic_encode_is_seeded_and_reproducible():
+    spec = comm.WireSpec("int8", 128, stochastic=True)
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(256,))
+                    .astype(np.float32))
+    k1, k2 = jax.random.PRNGKey(1), jax.random.PRNGKey(2)
+    a = comm.encode(spec, x, key=k1)
+    b = comm.encode(spec, x, key=k1)
+    c = comm.encode(spec, x, key=k2)
+    np.testing.assert_array_equal(np.asarray(a.payload),
+                                  np.asarray(b.payload))
+    assert not np.array_equal(np.asarray(a.payload), np.asarray(c.payload))
+
+
+def test_encode_ignores_key_on_deterministic_spec():
+    """The broadcast path may thread a key by accident — a non-stochastic
+    spec must stay bit-identical to the keyless encode."""
+    spec = comm.WireSpec("int8", 128)
+    x = jnp.asarray(np.random.default_rng(3).normal(size=(256,))
+                    .astype(np.float32))
+    a = comm.encode(spec, x)
+    b = comm.encode(spec, x, key=jax.random.PRNGKey(0))
+    np.testing.assert_array_equal(np.asarray(a.payload),
+                                  np.asarray(b.payload))
+
+
+def test_topk_count_lane_aligned():
+    spec = comm.WireSpec("int8", 128, topk_frac=0.1)
+    for n in (128, 1000, 4096, 165888):
+        k = comm.topk_count(spec, n)
+        assert k % 128 == 0 and k >= n * 0.1
+    assert comm.topk_count(comm.WireSpec("int8"), 300) == 300  # dense
+    # tiny populations still ship at least one lane
+    assert comm.topk_count(spec, 64) == 128
+
+
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16", "int8"])
+def test_sparse_encode_keeps_the_k_largest(dtype):
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.normal(size=(1024,)).astype(np.float32))
+    spec = comm.WireSpec(dtype, 128, topk_frac=0.25)
+    k = comm.topk_count(spec, 1024)
+    buf = comm.sparse_encode(spec, x, k)
+    assert buf.indices.dtype == jnp.int32
+    idx = np.asarray(buf.indices)
+    assert (np.diff(idx) > 0).all()          # sorted, distinct
+    want = set(np.argsort(-np.abs(np.asarray(x)))[:k].tolist())
+    assert set(idx.tolist()) == want
+    # decoded values sit within the dense wire's error of the kept entries
+    vals = np.asarray(comm.sparse_decode_values(spec, buf))
+    kept = np.asarray(x)[idx]
+    tol = {"float32": 0.0, "bfloat16": 0.05,
+           "int8": np.abs(kept).max() / 127.0}[dtype]
+    assert np.abs(vals - kept).max() <= tol + 1e-7
+
+
+def test_sparse_decode_scatters_only_kept_positions():
+    x = jnp.asarray(np.random.default_rng(8).normal(size=(512,))
+                    .astype(np.float32))
+    spec = comm.WireSpec("float32", topk_frac=0.25)
+    k = comm.topk_count(spec, 512)
+    buf = comm.sparse_encode(spec, x, k)
+    dense = np.asarray(comm.sparse_decode(spec, buf, 512))
+    idx = np.asarray(buf.indices)
+    np.testing.assert_array_equal(dense[idx], np.asarray(x)[idx])
+    dropped = np.setdiff1d(np.arange(512), idx)
+    np.testing.assert_array_equal(dense[dropped], 0.0)
+
+
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16", "int8"])
+@pytest.mark.parametrize("frac", [1.0, 0.5, 1 / 16])
+def test_wire_bytes_up_measured_matches_analytic(dtype, frac):
+    spec = comm.WireSpec(dtype, 128, topk_frac=frac)
+    for n in (2048, 165888):
+        measured = comm.wire_bytes_up(spec, n)
+        assert measured == comm.analytic_wire_bytes_up(spec, n)
+        if frac == 1.0:
+            assert measured == comm.wire_bytes(spec, n)
+        else:
+            # and both match a concretely encoded sparse buffer
+            k = comm.topk_count(spec, n)
+            buf = comm.sparse_encode(spec, jnp.ones((n,)), k)
+            assert comm.sparse_buffer_nbytes(buf) == measured
+
+
+def test_int8_topk_upload_beats_f32_by_10x():
+    """The tentpole's upload-direction acceptance ratio at the accounting
+    level: int8 payload + scales + int32 indices at topk_frac=1/16."""
+    spec = comm.WireSpec("int8", 128, topk_frac=1 / 16,
+                         stochastic=True, error_feedback=True)
+    f32 = comm.WireSpec("float32")
+    for n in (16384, 165888):
+        ratio = comm.wire_bytes_up(f32, n) / comm.wire_bytes_up(spec, n)
+        assert ratio >= 10.0, ratio
+
+
+# ---------------------------------------------------------------------------
+# Scatter-fold kernel: interpret-mode parity with the CPU reference
+# ---------------------------------------------------------------------------
+
+def _scatter_case(seed, n=512, z=4, k=128, quant_block=64):
+    rng = np.random.default_rng(seed)
+    acc = jnp.asarray(rng.normal(size=(n,)).astype(np.float32))
+    idx = np.stack([np.sort(rng.choice(n, size=k, replace=False))
+                    for _ in range(z)]).astype(np.int32)
+    vals = jnp.asarray(rng.normal(size=(z, k)).astype(np.float32))
+    scales = jnp.asarray(rng.uniform(0.5, 2.0, size=(z, k // quant_block))
+                         .astype(np.float32))
+    mask = jnp.asarray(rng.random(n) < 0.5)
+    w_m = jnp.asarray(rng.uniform(0, 1, size=(z,)).astype(np.float32))
+    w_r = jnp.asarray(rng.uniform(0, 1, size=(z,)).astype(np.float32))
+    return acc, vals, scales, jnp.asarray(idx), mask, w_m, w_r
+
+
+@pytest.mark.parametrize("with_scales", [True, False])
+def test_scatter_fold_kernel_matches_ref(with_scales):
+    from repro.kernels.masked_agg import ops as agg_ops
+    acc, vals, scales, idx, mask, w_m, w_r = _scatter_case(11)
+    sc = scales if with_scales else None
+    ref = agg_ops.masked_scatter_acc_ref(acc, vals, sc, idx, mask,
+                                         w_m, w_r, quant_block=64)
+    ker = agg_ops.masked_scatter_acc_pallas(acc, vals, sc, idx, mask,
+                                            w_m, w_r, quant_block=64,
+                                            block_n=256, interpret=True)
+    np.testing.assert_allclose(np.asarray(ker), np.asarray(ref),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_scatter_fold_gates_nan_rows():
+    """A NaN row at weight 0 (both masks) must leave the accumulator
+    untouched — the kernel gates BEFORE the multiply."""
+    from repro.kernels.masked_agg import ops as agg_ops
+    acc, vals, scales, idx, mask, w_m, w_r = _scatter_case(12)
+    vals = vals.at[1].set(jnp.nan)
+    w_m = w_m.at[1].set(0.0)
+    w_r = w_r.at[1].set(0.0)
+    for fn, kw in ((agg_ops.masked_scatter_acc_ref, {}),
+                   (agg_ops.masked_scatter_acc_pallas,
+                    {"block_n": 256, "interpret": True})):
+        out = fn(acc, vals, scales, idx, mask, w_m, w_r,
+                 quant_block=64, **kw)
+        assert np.isfinite(np.asarray(out)).all()
+
+
+def test_scatter_fold_dequantizes_like_reference():
+    """scales fold as a per-group multiply of the values — pin against
+    an explicit dense dequantize + scatter + weighted sum."""
+    from repro.kernels.masked_agg import ops as agg_ops
+    acc, vals, scales, idx, mask, w_m, w_r = _scatter_case(13)
+    got = agg_ops.masked_scatter_acc_ref(acc, vals, scales, idx, mask,
+                                         w_m, w_r, quant_block=64)
+    want = np.asarray(acc).copy()
+    for z in range(vals.shape[0]):
+        deq = np.asarray(vals[z]).reshape(-1, 64) \
+            * np.asarray(scales[z])[:, None]
+        deq = deq.reshape(-1)
+        w_at = np.where(np.asarray(mask)[np.asarray(idx[z])],
+                        float(w_m[z]), float(w_r[z]))
+        np.add.at(want, np.asarray(idx[z]), deq * w_at)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5,
+                               atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Trainer integration: upload-direction accounting under the v2 wire
+# ---------------------------------------------------------------------------
+
+def test_trainer_bills_sparse_uploads_separately():
+    dense = _make_trainer(comm_dtype="int8")
+    sparse = _make_trainer(comm_dtype="int8", topk_frac=1 / 16,
+                           stochastic_rounding=True, error_feedback=True)
+    assert sparse.bytes_down_per_round == dense.bytes_down_per_round
+    assert sparse.bytes_up_per_round < dense.bytes_up_per_round
+    f32 = _make_trainer()
+    assert f32.bytes_up_per_round / sparse.bytes_up_per_round >= 10.0
+
+
 def test_auto_chunk_budgets_int8_sidecar():
     """cohort_chunk="auto" under the int8 wire must budget the scale
     sidecar: the int8 stream copy is cheaper than f32, so the resolved

@@ -74,6 +74,38 @@ def test_rejects_int8_on_tree_engine():
         _cfg(comm_dtype="int8", agg_engine="tree")
 
 
+@pytest.mark.parametrize("bad", [0.0, -0.25, 1.5])
+def test_rejects_bad_topk_frac(bad):
+    # delegated to WireSpec — one source of truth for the sparsity knob
+    with pytest.raises(ValueError, match="topk_frac must be in"):
+        _cfg(topk_frac=bad)
+
+
+def test_rejects_stochastic_rounding_on_f32_wire():
+    with pytest.raises(ValueError,
+                       match="stochastic rounding requires a lossy wire"):
+        _cfg(stochastic_rounding=True)
+
+
+def test_rejects_error_feedback_on_lossless_wire():
+    # f32 + dense: the residual would be identically zero
+    with pytest.raises(ValueError,
+                       match="error_feedback requires a lossy upload"):
+        _cfg(error_feedback=True)
+    _cfg(error_feedback=True, comm_dtype="int8")        # lossy: fine
+    _cfg(error_feedback=True, topk_frac=0.5)            # sparse: fine
+
+
+def test_rejects_compressed_uploads_on_tree_engine():
+    with pytest.raises(ValueError,
+                       match="compressed uploads .* require.*flat"):
+        _cfg(topk_frac=0.5, agg_engine="tree")
+    with pytest.raises(ValueError,
+                       match="compressed uploads .* require.*flat"):
+        _cfg(comm_dtype="bfloat16", stochastic_rounding=True,
+             agg_engine="tree")
+
+
 def test_rejects_negative_async_lag():
     with pytest.raises(ValueError, match="async_lag must be >= 0"):
         _cfg(async_lag=-1)
@@ -183,6 +215,9 @@ def test_cli_flags_construct_a_valid_config():
         agg_stream_dtype=args.agg_stream_dtype,
         agg_memory_budget_mb=args.agg_memory_budget_mb,
         comm_dtype=args.comm_dtype, quant_block=args.quant_block,
+        topk_frac=args.topk_frac,
+        stochastic_rounding=args.stochastic_rounding,
+        error_feedback=args.error_feedback,
         async_lag=args.async_lag, async_staleness=args.staleness,
         async_decay=args.staleness_decay,
         variance_reduction=args.variance_reduction,

@@ -8,7 +8,7 @@ import pytest
 hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.core import aggregate, flatten, masking
+from repro.core import aggregate, comm, flatten, masking
 from repro.models import common
 
 jax.config.update("jax_platform_name", "cpu")
@@ -124,6 +124,124 @@ def test_flat_fold_matches_tree_fold(shapes, z, seed):
     for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
         np.testing.assert_allclose(np.asarray(g), np.asarray(w),
                                    rtol=1e-6, atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# Wire v2 invariants (encode/decode, stochastic rounding, top-k, EF)
+# ---------------------------------------------------------------------------
+
+_qblocks = st.sampled_from([16, 32, 64, 128])   # divisors of the lane width
+
+
+def _flat(seed, n, scale=10.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray((scale * rng.normal(size=(n,))).astype(np.float32))
+
+
+@_settings
+@given(dtype=st.sampled_from(["float32", "bfloat16", "int8"]),
+       qb=_qblocks, groups=st.integers(1, 6), seed=st.integers(0, 999))
+def test_wire_roundtrip_error_bound(dtype, qb, groups, seed):
+    """decode(encode(x)) stays within the wire's per-group error bound:
+    exact for f32, half a mantissa step for bf16 (relative), half a
+    quantization step of the element's OWN group for int8."""
+    x = _flat(seed, groups * qb)
+    spec = comm.WireSpec(dtype, qb)
+    back = np.asarray(comm.decode(spec, comm.encode(spec, x)))
+    x_np = np.asarray(x)
+    if dtype == "float32":
+        np.testing.assert_array_equal(back, x_np)
+    elif dtype == "bfloat16":
+        np.testing.assert_allclose(back, x_np, rtol=2 ** -8, atol=1e-30)
+    else:
+        err = np.abs(back - x_np).reshape(groups, qb)
+        step = np.abs(x_np).reshape(groups, qb).max(axis=1) / 127.0
+        assert (err <= 0.5 * step[:, None] + 1e-7).all()
+
+
+@_settings
+@given(dtype=st.sampled_from(["bfloat16", "int8"]), qb=_qblocks,
+       seed=st.integers(0, 99))
+def test_stochastic_rounding_is_unbiased(dtype, qb, seed):
+    """The mean of decode(encode(x, key)) over many seeds converges on x
+    (round-to-nearest would sit a deterministic half-step away).  The
+    int8 bound: averaging 96 uniform [0, 1) draws has std
+    step/sqrt(12*96) ~ 0.03 step — 0.25 step is ~8.5 sigma, far outside
+    chance but far inside round-to-nearest's worst case (0.5 step);
+    bf16's relative step drives its bound the same way."""
+    x = _flat(seed, 2 * qb)
+    spec = comm.WireSpec(dtype, qb, stochastic=True)
+    n_keys = 96
+    keys = jax.vmap(jax.random.PRNGKey)(
+        jnp.arange(n_keys) + seed * n_keys)
+    dec = jax.vmap(
+        lambda k: comm.decode(spec, comm.encode(spec, x, key=k)))(keys)
+    mean = np.asarray(jnp.mean(dec, axis=0))
+    x_np = np.asarray(x)
+    if dtype == "int8":
+        step = np.abs(x_np).reshape(2, qb).max(axis=1) / 127.0
+        tol = 0.25 * np.repeat(step, qb) + 1e-7
+    else:
+        tol = 0.25 * np.abs(x_np) * 2 ** -8 * 256 + 1e-6
+    assert (np.abs(mean - x_np) <= tol).all()
+
+
+@_settings
+@given(seed=st.integers(0, 999), n_lanes=st.integers(2, 8),
+       frac_kept=st.integers(1, 7))
+def test_topk_payload_is_exactly_the_k_largest(seed, n_lanes, frac_kept):
+    """On the f32 wire the sparse payload reproduces the k largest-|x|
+    entries bit for bit, and nothing else ships."""
+    n = n_lanes * 128
+    x = _flat(seed, n)
+    spec = comm.WireSpec("float32", topk_frac=frac_kept / 8.0)
+    k = comm.topk_count(spec, n)
+    buf = comm.sparse_encode(spec, x, k)
+    idx = np.asarray(buf.indices)
+    x_np = np.asarray(x)
+    want = np.sort(np.abs(x_np))[::-1][:k]
+    np.testing.assert_array_equal(
+        np.sort(np.abs(np.asarray(buf.payload)))[::-1], want)
+    np.testing.assert_array_equal(np.asarray(buf.payload), x_np[idx])
+    dense = np.asarray(comm.sparse_decode(spec, buf, n))
+    np.testing.assert_array_equal(dense[idx], x_np[idx])
+    assert np.count_nonzero(dense) <= k
+
+
+@_settings
+@given(dtype=st.sampled_from(["float32", "bfloat16", "int8"]),
+       frac_kept=st.integers(1, 8), seed=st.integers(0, 999),
+       stochastic=st.booleans())
+def test_error_feedback_conserves_the_delta(dtype, frac_kept, seed,
+                                            stochastic):
+    """The EF update's conservation law: whatever the wire drops stays in
+    the residual — ``residual' + decode(payload) == delta + residual``
+    for every dtype, sparsity and rounding mode.  This is the invariant
+    that makes compressed SGD converge (Karimireddy et al. 2019)."""
+    if stochastic and dtype == "float32":
+        stochastic = False               # invalid combination
+    n = 512
+    d = _flat(seed, n)
+    r = _flat(seed + 10_000, n, scale=3.0)
+    spec = comm.WireSpec(dtype, 64, topk_frac=frac_kept / 8.0,
+                         stochastic=stochastic, error_feedback=True)
+    d_in = d + r
+    key = jax.random.PRNGKey(seed)
+    if spec.is_sparse:
+        k = comm.topk_count(spec, n)
+        buf = comm.sparse_encode(spec, d_in, k, key=key)
+        vals = comm.sparse_decode_values(spec, buf)
+        r_new = d_in.at[buf.indices].add(-vals)
+        decoded = comm.sparse_decode(spec, buf, n)
+    else:
+        buf = comm.encode(spec, d_in, key=key)
+        decoded = comm.decode(spec, buf)
+        r_new = d_in - decoded
+    got = np.asarray(r_new + decoded)
+    want = np.asarray(d_in)
+    # float cancellation only: (a - v) + v vs a, ~1 ulp of the magnitudes
+    tol = 1e-5 * max(1.0, np.abs(want).max())
+    np.testing.assert_allclose(got, want, rtol=0, atol=tol)
 
 
 # ---------------------------------------------------------------------------
